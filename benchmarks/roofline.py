@@ -1,0 +1,79 @@
+"""Aggregate the dry-run artifacts into the §Roofline table (deliverable g).
+
+Reads artifacts/dryrun/*.json (produced by ``python -m repro.launch.dryrun
+--all --mesh both``) and emits the per-(arch x shape x mesh) roofline terms
+as a markdown table + summary stats."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.analysis.roofline import HW
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load(mesh: str = "pod") -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(ART, f"*__{mesh}.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def table(mesh: str = "pod") -> str:
+    rows = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck "
+        "| MODEL_FLOPS | useful |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    n_ok = n_skip = 0
+    for r in load(mesh):
+        if r["status"] == "SKIP":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | SKIP "
+                f"(full attention @500k) | — | — |"
+            )
+            n_skip += 1
+            continue
+        if r["status"] != "OK":
+            rows.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | |")
+            continue
+        rf = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.4f} "
+            f"| {rf['memory_s']:.4f} | {rf['collective_s']:.4f} "
+            f"| {rf['bottleneck']} | {rf['model_flops']:.3e} "
+            f"| {rf['useful_ratio']:.3f} |"
+        )
+        n_ok += 1
+    rows.append(f"\n({n_ok} OK cells, {n_skip} documented skips; "
+                f"hw: {HW['peak_flops']/1e12:.0f} TF/s, "
+                f"{HW['hbm_bw']/1e9:.0f} GB/s HBM, "
+                f"{HW['ici_bw']/1e9:.0f} GB/s ICI)")
+    return "\n".join(rows)
+
+
+def run() -> dict:
+    ok = [r for r in load("pod") if r["status"] == "OK"]
+    ok_mp = [r for r in load("multipod") if r["status"] == "OK"]
+    bn = {}
+    for r in ok:
+        bn[r["roofline"]["bottleneck"]] = bn.get(r["roofline"]["bottleneck"], 0) + 1
+    return {
+        "cells_ok_pod": len(ok),
+        "cells_ok_multipod": len(ok_mp),
+        "bottleneck_histogram": bn,
+        "mean_useful_ratio": (
+            sum(r["roofline"]["useful_ratio"] for r in ok) / len(ok)
+            if ok else 0.0
+        ),
+    }
+
+
+if __name__ == "__main__":
+    print(table("pod"))
+    import json as _json
+
+    print(_json.dumps(run(), indent=1))

@@ -1,0 +1,69 @@
+"""Paper Figure 2 / section 5.5: satisfaction ratio + relative utilization
+improvement over the trace, nvPAX vs Static vs Greedy, plus runtime.
+
+Paper values on the proprietary trace: nvPAX mean S 98.92% (std 0.48, min
+96.49, max 100), Static 81.30%, Greedy 98.92%; nvPAX >= Static on every
+timestamp; mean wall 264.69 ms.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.greedy import greedy_allocate, static_allocate
+from repro.core.metrics import relative_improvement, satisfaction_ratio
+from repro.core.nvpax import optimize
+from repro.core.problem import AllocProblem
+from repro.pdn.telemetry import TelemetrySim, TraceConfig
+from repro.pdn.tree import build_datacenter
+
+
+def run(steps: int = 60, stride: int = 48, seed: int = 0) -> dict:
+    """``steps`` control steps sampled every ``stride`` from the 3-day
+    trace (stride 48 = 24 min -> covers diurnal structure in few steps)."""
+    pdn = build_datacenter()
+    sim = TelemetrySim(TraceConfig(n_devices=pdn.n, seed=seed))
+    s_nv, s_st, s_gr, du_st, du_gr, wall = [], [], [], [], [], []
+    warm = None
+    for i in range(steps):
+        t = i * stride
+        power = sim.power(t)
+        ap = AllocProblem.build(pdn, power)
+        res = optimize(ap, warm=warm)
+        warm = res.warm_state
+        r = np.asarray(ap.r)
+        a_st = static_allocate(pdn)
+        a_gr = greedy_allocate(pdn, power)
+        s_nv.append(satisfaction_ratio(r, res.allocation))
+        s_st.append(satisfaction_ratio(r, a_st))
+        s_gr.append(satisfaction_ratio(r, a_gr))
+        du_st.append(relative_improvement(r, res.allocation, a_st))
+        du_gr.append(relative_improvement(r, res.allocation, a_gr))
+        wall.append(res.wall_time_s * 1000)
+    s_nv, s_st, s_gr = map(np.asarray, (s_nv, s_st, s_gr))
+    out = {
+        "steps": steps,
+        "n_devices": pdn.n,
+        "S_nvpax_mean": 100 * s_nv.mean(),
+        "S_nvpax_std": 100 * s_nv.std(),
+        "S_nvpax_min": 100 * s_nv.min(),
+        "S_nvpax_max": 100 * s_nv.max(),
+        "S_static_mean": 100 * s_st.mean(),
+        "S_greedy_mean": 100 * s_gr.mean(),
+        "dU_static_mean_pct": float(np.mean(du_st)),
+        "dU_greedy_mean_pct": float(np.mean(du_gr)),
+        "nvpax_ge_static_every_step": bool((s_nv >= s_st - 1e-9).all()),
+        "wall_ms_mean": float(np.mean(wall[1:])),  # drop compile step
+        "wall_ms_std": float(np.std(wall[1:])),
+        "paper": {
+            "S_nvpax_mean": 98.92, "S_static_mean": 81.30,
+            "S_greedy_mean": 98.92, "wall_ms_mean": 264.69,
+        },
+    }
+    return out
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=1))

@@ -1,0 +1,49 @@
+"""Paper Figure 3 / section 5.6: wall-clock of a single optimize() call on
+synthetic random hierarchies, n in {1e3, 5e3, 1e4, 2.5e4, 5e4, 1e5}.
+
+Paper: mean runtime scales ~n^1.16 over 1e3-1e5 on an M4 Pro with
+Clarabel/HiGHS; we measure the same protocol on our PDHG/waterfill stack
+(warm-started, post-compile) and report the fitted exponent.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.nvpax import optimize
+from repro.core.problem import AllocProblem
+from repro.pdn.hierarchy_gen import random_hierarchy
+from repro.pdn.telemetry import TelemetrySim, TraceConfig
+
+
+def run(sizes=(1_000, 5_000, 10_000, 25_000, 50_000, 100_000), repeats=3):
+    rows = []
+    for n in sizes:
+        pdn = random_hierarchy(int(n), seed=1)
+        sim = TelemetrySim(TraceConfig(n_devices=pdn.n, seed=2))
+        # compile + warm
+        ap = AllocProblem.build(pdn, sim.power(0))
+        res = optimize(ap)
+        warm = res.warm_state
+        times = []
+        for r in range(repeats):
+            ap = AllocProblem.build(pdn, sim.power(r + 1))
+            t0 = time.perf_counter()
+            res = optimize(ap, warm=warm)
+            times.append(time.perf_counter() - t0)
+            warm = res.warm_state
+        rows.append({"n": int(n), "mean_s": float(np.mean(times)),
+                     "std_s": float(np.std(times))})
+    ns = np.array([r["n"] for r in rows], float)
+    ts = np.array([r["mean_s"] for r in rows], float)
+    slope = np.polyfit(np.log(ns), np.log(ts), 1)[0]
+    return {"rows": rows, "fitted_exponent": float(slope),
+            "paper_exponent": 1.16}
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=1))

@@ -1,0 +1,69 @@
+"""Solver-internals microbench (§Perf evidence): per-phase iterations and
+wall time, warm vs cold starts, waterfill fast-path vs iterated LP."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.nvpax import NvpaxOptions, optimize
+from repro.core.problem import AllocProblem
+from repro.pdn.telemetry import TelemetrySim, TraceConfig
+from repro.pdn.tree import build_datacenter
+
+
+def run(steps: int = 5) -> dict:
+    pdn = build_datacenter()
+    sim = TelemetrySim(TraceConfig(n_devices=pdn.n, seed=0))
+
+    # compile
+    res = optimize(AllocProblem.build(pdn, sim.power(0)))
+
+    cold_ms, warm_ms, cold_it, warm_it = [], [], [], []
+    warm = res.warm_state
+    for t in range(1, steps + 1):
+        ap = AllocProblem.build(pdn, sim.power(t))
+        t0 = time.perf_counter()
+        rc = optimize(ap)
+        cold_ms.append(1000 * (time.perf_counter() - t0))
+        cold_it.append(rc.stats["total_iterations"])
+        t0 = time.perf_counter()
+        rw = optimize(ap, warm=warm)
+        warm_ms.append(1000 * (time.perf_counter() - t0))
+        warm_it.append(rw.stats["total_iterations"])
+        warm = rw.warm_state
+
+    # waterfill fast path vs iterated LP (phases II/III), small surplus step
+    from repro.pdn.tree import build_from_level_sizes
+
+    pdn2 = build_from_level_sizes([2, 4, 4], gpus_per_server=8)
+    req = np.random.default_rng(0).uniform(150, 450, pdn2.n)
+    ap2 = AllocProblem.build(pdn2, req)
+    optimize(ap2, NvpaxOptions(use_waterfill=False))  # compile
+    t0 = time.perf_counter()
+    r_lp = optimize(ap2, NvpaxOptions(use_waterfill=False))
+    lp_ms = 1000 * (time.perf_counter() - t0)
+    t0 = time.perf_counter()
+    r_wf = optimize(ap2, NvpaxOptions(use_waterfill=True))
+    wf_ms = 1000 * (time.perf_counter() - t0)
+    agree = float(np.abs(r_lp.allocation - r_wf.allocation).max())
+
+    return {
+        "n_devices": pdn.n,
+        "cold_ms_mean": float(np.mean(cold_ms)),
+        "warm_ms_mean": float(np.mean(warm_ms)),
+        "cold_iters_mean": float(np.mean(cold_it)),
+        "warm_iters_mean": float(np.mean(warm_it)),
+        "warm_speedup": float(np.mean(cold_ms) / np.mean(warm_ms)),
+        "maxmin_lp_ms": lp_ms,
+        "maxmin_waterfill_ms": wf_ms,
+        "waterfill_speedup": lp_ms / wf_ms,
+        "waterfill_lp_max_dev_W": agree,
+    }
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=1))

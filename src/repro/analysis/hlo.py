@@ -1,0 +1,88 @@
+"""Post-SPMD HLO inspection: collective inventory + byte accounting.
+
+``collective_stats`` scans a compiled module's text for all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute ops and sums
+their operand bytes (cost_analysis does not expose collectives, so the
+roofline's collective term is derived here).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+__all__ = ["collective_stats", "shape_bytes", "count_ops"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# op lines look like:  %name = bf16[8,128]{1,0} all-reduce(...), replica_groups=...
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|tuple\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def shape_bytes(text: str) -> int:
+    """Total bytes of every typed shape literal in ``text``."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _result_bytes(line: str) -> int:
+    """Bytes of the op's RESULT shape(s) — the lhs of '... = shape op(...)'."""
+    m = re.search(r"=\s*(.*?)\s+[a-z-]+\(", line)
+    if not m:
+        return 0
+    return shape_bytes(m.group(1))
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-kind {count, bytes} for collective ops.
+
+    Bytes counted are result bytes per op instance (once per -start for
+    async pairs).  This is per-PARTITION traffic in the SPMD module.
+    """
+    stats: dict[str, dict] = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue  # count the -start only
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += _result_bytes(line)
+    total = {
+        "count": sum(v["count"] for v in stats.values()),
+        "bytes": sum(v["bytes"] for v in stats.values()),
+    }
+    out = dict(stats)
+    out["total"] = total
+    return out
+
+
+def count_ops(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

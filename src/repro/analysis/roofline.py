@@ -1,0 +1,139 @@
+"""Roofline terms from the dry-run's compiled artifact (deliverable g).
+
+Hardware model (TPU v5e target):
+    peak 197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s/link ICI.
+
+Per (arch x shape x mesh) cell:
+    compute term    = HLO_FLOPs_per_chip / peak
+    memory term     = HLO_bytes_per_chip / HBM_bw
+    collective term = collective_bytes_per_chip / link_bw
+(all seconds; the dominant term is the bottleneck).  HLO_FLOPs/bytes come
+from :mod:`repro.analysis.flops` (trip-count-aware walker over the SPMD
+module — already per-partition).  collective_bytes comes from
+:mod:`repro.analysis.hlo`.
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per the assignment; the
+ratio MODEL_FLOPS / HLO_FLOPs exposes remat/redundancy waste.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+__all__ = ["HW", "roofline_terms", "model_flops", "param_counts"]
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+HW = {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW, "ici_bw": ICI_BW}
+
+
+def param_counts(cfg) -> dict:
+    """Total and active parameter counts from the config (analytic)."""
+    D, F, V = cfg.d_model, cfg.d_ff, cfg.vocab
+    H, KV, dh = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    attn = D * H * dh + 2 * D * KV * dh + H * dh * D
+    if cfg.mlp_kind == "swiglu":
+        ffn_dense = 3 * D * F
+    else:
+        ffn_dense = 2 * D * F
+    moe_total = cfg.n_experts * ffn_dense + D * cfg.n_experts
+    moe_active = cfg.top_k * ffn_dense + D * cfg.n_experts
+
+    if cfg.ssm_state:
+        d_inner = cfg.ssm_expand * D
+        Hs = d_inner // cfg.ssm_headdim
+        GN = cfg.ssm_groups * cfg.ssm_state
+        ssd = (
+            D * (2 * d_inner + 2 * GN + Hs)
+            + cfg.ssm_conv * (d_inner + 2 * GN)
+            + d_inner * D
+            + 3 * Hs
+            + d_inner
+        )
+    else:
+        ssd = 0
+
+    total = active = 0
+    n_layers = cfg.n_layers + cfg.enc_layers
+    for layer in range(cfg.n_layers):
+        pos = layer % max(cfg.unit_size, 1)
+        mix = attn if cfg.layer_kind(pos) == "attn" else ssd
+        if cfg.layer_moe(pos):
+            total += mix + moe_total
+            active += mix + moe_active
+        elif F > 0:
+            total += mix + ffn_dense
+            active += mix + ffn_dense
+        else:
+            total += mix
+            active += mix
+    for _ in range(cfg.enc_layers):
+        total += attn + ffn_dense
+        active += attn + ffn_dense
+    emb = V * D * (1 if cfg.tie_embeddings else 2)
+    total += emb
+    active += emb
+    return {"total": total, "active": active, "n_layers": n_layers}
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N_active*tokens for training; 2*N_active*tokens for prefill;
+    2*N_active*batch for one decode step (+ attention KV readout FLOPs)."""
+    pc = param_counts(cfg)
+    n_active = pc["active"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence; attention score/readout over the cache
+    flops = 2.0 * n_active * shape.global_batch
+    n_attn = sum(
+        1
+        for layer in range(cfg.n_layers)
+        if cfg.layer_kind(layer % max(cfg.unit_size, 1)) == "attn"
+    )
+    kv_read = (
+        4.0 * n_attn * cfg.n_heads * cfg.head_dim * shape.seq_len
+        * shape.global_batch
+    )
+    return flops + kv_read
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    hlo_flops_per_chip: float
+    useful_ratio: float  # MODEL_FLOPS / (HLO_FLOPs * chips)
+
+
+def roofline_terms(
+    cfg, shape, *, n_devices: int, hlo_flops: float, hlo_bytes: float,
+    collective_bytes: float,
+) -> RooflineTerms:
+    """All inputs are per-partition (the SPMD module is per-device)."""
+    compute_s = hlo_flops / PEAK_FLOPS
+    memory_s = hlo_bytes / HBM_BW
+    coll_s = collective_bytes / ICI_BW
+    terms = {
+        "compute": compute_s, "memory": memory_s, "collective": coll_s,
+    }
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    total_hlo = hlo_flops * n_devices
+    return RooflineTerms(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=coll_s,
+        bottleneck=bottleneck,
+        model_flops=mf,
+        hlo_flops_per_chip=hlo_flops,
+        useful_ratio=mf / total_hlo if total_hlo else 0.0,
+    )

@@ -1,0 +1,11 @@
+from repro.configs.base import SHAPES, ArchConfig, ShapeSpec
+from repro.configs.registry import ARCHS, get_arch, list_archs
+
+__all__ = [
+    "SHAPES",
+    "ARCHS",
+    "ArchConfig",
+    "ShapeSpec",
+    "get_arch",
+    "list_archs",
+]

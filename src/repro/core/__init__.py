@@ -1,0 +1,35 @@
+"""nvPAX core: the paper's contribution as a composable JAX module."""
+
+from repro.core.greedy import greedy_allocate, static_allocate
+from repro.core.metrics import (
+    relative_improvement,
+    satisfaction_ratio,
+    sla_margin,
+    tenant_satisfaction,
+    useful_utilization,
+)
+from repro.core.nvpax import AllocResult, NvpaxOptions, optimize
+from repro.core.pdhg import SolverOptions, SolverState
+from repro.core.problem import AllocProblem, StepProblem
+from repro.core.treeops import SlaTopo, TreeTopo
+from repro.core.waterfill import waterfill
+
+__all__ = [
+    "AllocProblem",
+    "AllocResult",
+    "NvpaxOptions",
+    "SlaTopo",
+    "SolverOptions",
+    "SolverState",
+    "StepProblem",
+    "TreeTopo",
+    "greedy_allocate",
+    "optimize",
+    "relative_improvement",
+    "satisfaction_ratio",
+    "sla_margin",
+    "static_allocate",
+    "tenant_satisfaction",
+    "useful_utilization",
+    "waterfill",
+]

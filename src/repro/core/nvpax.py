@@ -1,0 +1,120 @@
+"""nvPAX — Algorithm 3: the full three-phase power allocation policy.
+
+``optimize()`` is the public entry point invoked by the closed-loop power
+controller every control step.  It is deterministic, always returns a
+feasible allocation (exact repair, section "repair" of phases.py), and
+supports warm starting across control steps (paper section 5.6 "additional
+speedups are possible via ... warm-starting across control steps" — we
+implement it, see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pdhg, phases
+from repro.core.problem import AllocProblem
+
+__all__ = ["AllocResult", "NvpaxOptions", "optimize"]
+
+
+@dataclass(frozen=True)
+class NvpaxOptions:
+    eps: float = 1e-5  # paper's regularization weight
+    solver: pdhg.SolverOptions = field(default_factory=pdhg.SolverOptions)
+    run_phase2: bool = True
+    run_phase3: bool = True
+    max_rounds: int = phases.MAX_ROUNDS
+    x64: bool = True  # solve in float64 (jax.enable_x64 context)
+    # exact water-filling fast path for the max-min phases on SLA-free
+    # problems (beyond-paper optimization; equals the iterated-LP limit)
+    use_waterfill: bool = True
+    # Anytime / deadline-aware mode (the paper's stated future work,
+    # section 6): every phase boundary is a valid, feasible allocation, so
+    # when the elapsed wall time exceeds the deadline the remaining
+    # refinement phases (II: active surplus, III: idle surplus) are
+    # truncated and the best-so-far allocation is returned with
+    # stats["truncated"]=True.  Phase I always runs: it carries feasibility
+    # and request satisfaction.
+    deadline_s: float | None = None
+
+
+@dataclass
+class AllocResult:
+    allocation: np.ndarray  # [n] final feasible allocation (phase III output)
+    phase1: np.ndarray
+    phase2: np.ndarray
+    warm_state: Any  # pdhg.SolverState for the next control step
+    wall_time_s: float
+    stats: dict[str, Any]
+
+
+def optimize(
+    ap: AllocProblem,
+    options: NvpaxOptions = NvpaxOptions(),
+    warm: pdhg.SolverState | None = None,
+) -> AllocResult:
+    """Run Algorithm 3 on one control step's problem."""
+    ctx = jax.enable_x64(True) if options.x64 else _nullcontext()
+    t0 = time.perf_counter()
+
+    def in_budget() -> bool:
+        return (
+            options.deadline_s is None
+            or time.perf_counter() - t0 < options.deadline_s
+        )
+
+    truncated = False
+    with ctx:
+        x1, state, s1 = phases.phase1(ap, options.solver, options.eps, warm)
+        x2 = x1
+        s2 = phases.PhaseStats(0, 0, True, 0.0)
+        if options.run_phase2 and in_budget():
+            x2, state, s2 = phases.run_maxmin_phase(
+                ap, x1, ap.active, ap.idle, options.solver, options.eps, state,
+                options.max_rounds, use_waterfill=options.use_waterfill,
+            )
+        elif options.run_phase2:
+            truncated = True
+        x3 = x2
+        s3 = phases.PhaseStats(0, 0, True, 0.0)
+        if options.run_phase3 and in_budget():
+            empty = jnp.zeros_like(ap.active)
+            x3, state, s3 = phases.run_maxmin_phase(
+                ap, x2, ap.idle, empty, options.solver, options.eps, state,
+                options.max_rounds, use_waterfill=options.use_waterfill,
+            )
+        elif options.run_phase3:
+            truncated = True
+        x3 = x3.block_until_ready()
+    wall = time.perf_counter() - t0
+    return AllocResult(
+        allocation=np.asarray(x3),
+        phase1=np.asarray(x1),
+        phase2=np.asarray(x2),
+        warm_state=state,
+        wall_time_s=wall,
+        stats={
+            "phase1": s1._asdict(),
+            "phase2": s2._asdict(),
+            "phase3": s3._asdict(),
+            "total_solves": s1.solves + s2.solves + s3.solves,
+            "total_iterations": s1.iterations + s2.iterations + s3.iterations,
+            "converged": s1.converged and s2.converged and s3.converged,
+            "truncated": truncated,
+        },
+    )
+
+
+class _nullcontext:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False

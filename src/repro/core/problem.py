@@ -1,0 +1,159 @@
+"""Problem containers for the nvPAX allocator.
+
+Two levels:
+
+* :class:`AllocProblem` — the *control-step* problem: fleet state (limits,
+  requests, priorities, active/idle), PDN topology, tenant SLAs.  Built once
+  per control step from host-side numpy (see :mod:`repro.pdn`).
+* :class:`StepProblem` — one convex program in the unified QP/LP form solved
+  by :mod:`repro.core.pdhg`:
+
+      minimize   0.5 * sum_i w_i (x_i - target_i)^2  +  c.x  +  c_t * t
+      subject to lo <= x <= hi,  t_lo <= t <= t_hi,
+                 tree subtree sums        <= cap,
+                 sla_lo <= tenant sums    <= sla_hi,
+                 x_i - t                  >= imp_lo_i   (vacuous if -inf).
+
+  Phase I instantiates the QP (w > 0, t pinned to 0, improvement rows
+  vacuous); Phases II/III instantiate the max-min LP (w = 0, c_t = -1,
+  improvement rows active on the optimized set).  All phases share one
+  jitted solver because shapes are identical.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.treeops import SlaTopo, TreeTopo
+from repro.pdn.tree import FlatPDN
+
+__all__ = ["AllocProblem", "StepProblem", "INF"]
+
+INF = float("inf")
+
+
+class AllocProblem(NamedTuple):
+    """One control step's allocation problem (jnp arrays)."""
+
+    # fleet
+    l: jnp.ndarray  # [n] device minimum power
+    u: jnp.ndarray  # [n] device maximum power
+    r: jnp.ndarray  # [n] requests, clipped to [l, u]; r = l for idle
+    priority: jnp.ndarray  # [n] int32 in {1..P}, higher = more important
+    active: jnp.ndarray  # [n] bool
+    # constraints
+    tree: TreeTopo
+    sla: SlaTopo
+    # options
+    weight_scale: jnp.ndarray  # [n] per-device deviation scale (1 or 1/u_i)
+
+    @property
+    def n(self) -> int:
+        return self.l.shape[0]
+
+    @property
+    def idle(self) -> jnp.ndarray:
+        return ~self.active
+
+    @classmethod
+    def build(
+        cls,
+        pdn: FlatPDN,
+        requests: np.ndarray,
+        *,
+        active: np.ndarray | None = None,
+        priority: np.ndarray | None = None,
+        idle_threshold: float = 150.0,
+        sla: SlaTopo | None = None,
+        normalized: bool = False,
+        dtype=jnp.float64,
+    ) -> "AllocProblem":
+        """Assemble a control-step problem from a flattened PDN + telemetry.
+
+        Mirrors the paper's request pre-processing (section 5.2): requests
+        are clipped to ``[l, u]``; a device is idle if its raw request is
+        below ``idle_threshold`` (unless an explicit ``active`` mask, e.g.
+        from the job scheduler, is given); idle devices request ``l``.
+        """
+        n = pdn.n
+        requests = np.asarray(requests, dtype=np.float64)
+        if requests.shape != (n,):
+            raise ValueError(f"requests shape {requests.shape} != ({n},)")
+        if active is None:
+            active = requests >= idle_threshold
+        active = np.asarray(active, dtype=bool)
+        r = np.clip(requests, pdn.dev_l, pdn.dev_u)
+        r = np.where(active, r, pdn.dev_l)
+        if priority is None:
+            priority = np.ones((n,), dtype=np.int32)
+        priority = np.asarray(priority, dtype=np.int32)
+        if (priority < 1).any():
+            raise ValueError("priorities must be >= 1")
+        weight_scale = (1.0 / pdn.dev_u) if normalized else np.ones((n,))
+        # f64 conversion must happen under an x64 context or jax silently
+        # truncates to f32.
+        import jax  # local import to keep module import light
+
+        ctx = jax.enable_x64(True) if dtype == jnp.float64 else _null()
+        with ctx:
+            if sla is None:
+                sla = SlaTopo.empty(dtype)
+            return cls._assemble(pdn, r, priority, active, sla, weight_scale, dtype)
+
+    @classmethod
+    def _assemble(cls, pdn, r, priority, active, sla, weight_scale, dtype):
+        return cls(
+            l=jnp.asarray(pdn.dev_l, dtype),
+            u=jnp.asarray(pdn.dev_u, dtype),
+            r=jnp.asarray(r, dtype),
+            priority=jnp.asarray(priority),
+            active=jnp.asarray(active),
+            tree=TreeTopo(
+                start=jnp.asarray(pdn.node_start),
+                end=jnp.asarray(pdn.node_end),
+                cap=jnp.asarray(pdn.node_cap, dtype),
+                depth=jnp.asarray(pdn.node_depth),
+            ),
+            sla=SlaTopo(
+                dev=sla.dev,
+                ten=sla.ten,
+                lo=jnp.asarray(sla.lo, dtype),
+                hi=jnp.asarray(sla.hi, dtype),
+            ),
+            weight_scale=jnp.asarray(weight_scale, dtype),
+        )
+
+
+class _null:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+class StepProblem(NamedTuple):
+    """One convex program in the unified form (see module docstring)."""
+
+    # objective
+    w: jnp.ndarray  # [n] diagonal quadratic weights (0 for LP)
+    target: jnp.ndarray  # [n] quadratic targets
+    c: jnp.ndarray  # [n] linear cost on x
+    c_t: jnp.ndarray  # scalar linear cost on t
+    # variable boxes
+    lo: jnp.ndarray  # [n]
+    hi: jnp.ndarray  # [n]
+    t_lo: jnp.ndarray  # scalar
+    t_hi: jnp.ndarray  # scalar
+    # row bounds (tree lower bound is implicitly -inf)
+    tree_hi: jnp.ndarray  # [m]
+    sla_lo: jnp.ndarray  # [k]
+    sla_hi: jnp.ndarray  # [k]
+    imp_lo: jnp.ndarray  # [n]; -inf disables row i
+
+    @property
+    def n(self) -> int:
+        return self.w.shape[0]

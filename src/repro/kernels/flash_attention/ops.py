@@ -1,0 +1,7 @@
+"""Jitted public wrapper for the flash-attention kernel (interpret on CPU)."""
+
+from __future__ import annotations
+
+from repro.kernels.flash_attention.kernel import flash_attention
+
+__all__ = ["flash_attention"]

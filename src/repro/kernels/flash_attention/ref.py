@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the flash-attention kernel: plain softmax attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(q, k, v, *, causal=True, scale=None):
+    """q: [B,Sq,H,dh]; k,v: [B,Sk,KV,dh] (GQA: H % KV == 0)."""
+    B, Sq, H, dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    scale = dh**-0.5 if scale is None else scale
+    rep = H // KV
+    kq = jnp.repeat(k, rep, axis=2) if rep > 1 else k
+    vq = jnp.repeat(v, rep, axis=2) if rep > 1 else v
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kq).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w.astype(q.dtype), vq)

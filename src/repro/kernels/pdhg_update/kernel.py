@@ -1,0 +1,92 @@
+"""Fused PDHG update — Pallas TPU kernel.
+
+The solver's hot loop applies ~15 elementwise ops over the primal state per
+iteration (prox, extrapolation) and ~8 over each dual block.  Unfused, each
+op is an HBM round-trip at fleet scale (n = 1e5-1e6 devices); fused, the
+whole update streams x once HBM->VMEM->HBM.  Blocked over n with a VMEM
+BlockSpec so arbitrarily large fleets tile cleanly; block size 8*128*8 keeps
+eight f32 operand tiles + two outputs under ~0.4 MB VMEM, lane-aligned
+(128) and sublane-aligned (8) for the VPU.
+
+Validated in interpret mode against ``ref.py`` (CPU has no Pallas TPU
+lowering); on real TPU hardware drop ``interpret=True``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["primal_update", "dual_prox", "BLOCK"]
+
+BLOCK = 8 * 128 * 8  # 8192 elements: VPU lane/sublane aligned
+
+
+def _primal_kernel(x_ref, gx_ref, c_ref, w_ref, t_ref, lo_ref, hi_ref,
+                   tau_ref, x1_ref, xe_ref):
+    x = x_ref[...]
+    tau = tau_ref[0]
+    w = w_ref[...]
+    num = x - tau * (gx_ref[...] + c_ref[...]) + tau * w * t_ref[...]
+    x1 = jnp.clip(num / (1.0 + tau * w), lo_ref[...], hi_ref[...])
+    x1_ref[...] = x1
+    xe_ref[...] = 2.0 * x1 - x
+
+
+def _dual_kernel(y_ref, a_ref, sig_ref, lo_ref, hi_ref, out_ref):
+    sigma = sig_ref[0]
+    z = y_ref[...] + sigma * a_ref[...]
+    out_ref[...] = z - sigma * jnp.clip(z / sigma, lo_ref[...], hi_ref[...])
+
+
+def _pad(v, n_pad):
+    return jnp.pad(v, (0, n_pad - v.shape[0]))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
+def primal_update(x, gx, c, w, target, lo, hi, tau, *, interpret=True,
+                  block=BLOCK):
+    n = x.shape[0]
+    np_ = pl.cdiv(n, block) * block
+    args = [_pad(v, np_) for v in (x, gx, c, w, target, lo, hi)]
+    tau = jnp.asarray([tau], x.dtype)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    x1, xe = pl.pallas_call(
+        _primal_kernel,
+        grid=(np_ // block,),
+        in_specs=[spec] * 7 + [pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=(spec, spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((np_,), x.dtype),
+            jax.ShapeDtypeStruct((np_,), x.dtype),
+        ),
+        interpret=interpret,
+    )(*args, tau)
+    return x1[:n], xe[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
+def dual_prox(y, a, sigma, lo, hi, *, interpret=True, block=BLOCK):
+    n = y.shape[0]
+    np_ = pl.cdiv(n, block) * block
+    big = jnp.asarray(jnp.finfo(y.dtype).max / 2, y.dtype)
+    args = [
+        _pad(y, np_),
+        _pad(a, np_),
+        jnp.asarray([sigma], y.dtype),
+        jnp.pad(lo, (0, np_ - n), constant_values=-big),
+        jnp.pad(hi, (0, np_ - n), constant_values=big),
+    ]
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    out = pl.pallas_call(
+        _dual_kernel,
+        grid=(np_ // block,),
+        in_specs=[spec, spec, pl.BlockSpec(memory_space=pl.ANY), spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((np_,), y.dtype),
+        interpret=interpret,
+    )(*args)
+    return out[:n]

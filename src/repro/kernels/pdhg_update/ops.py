@@ -1,0 +1,11 @@
+"""Jitted public wrappers for the fused PDHG update kernel.
+
+``interpret`` defaults to True because this container has no TPU; the
+launcher flips it off on real hardware (the BlockSpecs are TPU-shaped).
+"""
+
+from __future__ import annotations
+
+from repro.kernels.pdhg_update.kernel import dual_prox, primal_update
+
+__all__ = ["primal_update", "dual_prox"]

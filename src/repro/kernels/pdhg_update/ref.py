@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused PDHG update kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["primal_update_ref", "dual_prox_ref"]
+
+
+def primal_update_ref(x, gx, c, w, target, lo, hi, tau):
+    """Primal prox (diagonal quadratic + box) and over-relaxed extrapolation.
+
+    x1 = clip((x - tau*(gx + c) + tau*w*target) / (1 + tau*w), lo, hi)
+    xe = 2*x1 - x
+    """
+    x1 = jnp.clip(
+        (x - tau * (gx + c) + tau * w * target) / (1.0 + tau * w), lo, hi
+    )
+    return x1, 2.0 * x1 - x
+
+
+def dual_prox_ref(y, a, sigma, lo, hi):
+    """prox of sigma*g* for g = indicator[lo, hi] applied to z = y + sigma*a:
+    z - sigma * clip(z / sigma, lo, hi)."""
+    z = y + sigma * a
+    return z - sigma * jnp.clip(z / sigma, lo, hi)

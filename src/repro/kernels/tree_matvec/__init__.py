@@ -1,0 +1,3 @@
+from repro.kernels.tree_matvec.ops import tree_matvec, tree_rmatvec
+
+__all__ = ["tree_matvec", "tree_rmatvec"]

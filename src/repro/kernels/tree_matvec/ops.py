@@ -1,0 +1,7 @@
+"""Jitted public wrappers for the tree-matvec kernel (interpret=True on CPU)."""
+
+from __future__ import annotations
+
+from repro.kernels.tree_matvec.kernel import tree_matvec, tree_rmatvec
+
+__all__ = ["tree_matvec", "tree_rmatvec"]

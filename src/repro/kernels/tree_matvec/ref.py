@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the tree-constraint matvec kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["tree_matvec_ref", "tree_rmatvec_ref"]
+
+
+def tree_matvec_ref(x, start, end):
+    """Subtree sums over DFS-contiguous ranges: out[j] = sum x[start_j:end_j]."""
+    csum = jnp.concatenate([jnp.zeros((1,), x.dtype), jnp.cumsum(x)])
+    return csum[end] - csum[start]
+
+
+def tree_rmatvec_ref(y, start, end, n):
+    """Adjoint: device i accumulates duals of covering nodes."""
+    diff = jnp.zeros((n + 1,), y.dtype)
+    diff = diff.at[start].add(y)
+    diff = diff.at[end].add(-y)
+    return jnp.cumsum(diff)[:n]

@@ -1,0 +1,290 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape x mesh) cell, lower + compile the
+real ``train_step`` / ``serve_step`` against ShapeDtypeStruct stand-ins on
+the production mesh — 512 placeholder host devices, no allocation — and
+record ``memory_analysis()`` (fits-per-device proof), ``cost_analysis()``
+(FLOPs/bytes for the roofline) and the collective inventory parsed from the
+post-SPMD HLO.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --mesh pod
+    python -m repro.launch.dryrun --all [--mesh both] [--out artifacts/dryrun]
+
+NOTE: the XLA_FLAGS line above MUST run before any other import (jax locks
+the device count at first init); do not move it or set it globally.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np  # noqa: F401
+
+from repro.analysis.flops import analyze_hlo
+from repro.analysis.hlo import collective_stats
+from repro.analysis.roofline import model_flops, param_counts, roofline_terms
+from repro.configs import ARCHS, SHAPES, get_arch
+from repro.data.pipeline import make_batch_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import build
+from repro.sharding import default_rules, param_sharding, resolve_spec, use_rules
+from repro.training.optimizer import adamw_init
+from repro.training.state import TrainState
+from repro.training.step import make_serve_steps, make_train_step
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _spec_tree(cfg, api):
+    """Logical spec tree (no array allocation: specs are name tuples)."""
+    out = {}
+
+    def capture():
+        params, specs = api.init(jax.random.key(0))
+        out["specs"] = specs
+        return params
+
+    jax.eval_shape(capture)
+    return out["specs"]
+
+
+def dryrun_cell(arch: str, shape_name: str, mesh_kind: str,
+                cfg_overrides: dict | None = None) -> dict:
+    """Lower + compile one cell; returns the record for EXPERIMENTS.md."""
+    import dataclasses as _dc
+
+    cfg = get_arch(arch)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    if not cfg.runnable(shape_name):
+        return {
+            "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+            "status": "SKIP",
+            "reason": "full-attention arch; long-context cell is infeasible "
+                      "by design (DESIGN.md section 5)",
+        }
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    api = build(cfg)
+    # decode steps cannot amortize FSDP weight gathers -> TP-only serving
+    # rules (§Perf hillclimb H3); train/prefill keep FSDP
+    rules = default_rules(mesh, serving=(shape.kind == "decode"))
+    t0 = time.time()
+    with mesh, use_rules(rules):
+        specs = _spec_tree(cfg, api)
+        params_sds = jax.eval_shape(lambda: api.init(jax.random.key(0))[0])
+        params_sh = param_sharding(specs, params_sds, rules)
+        repl = NamedSharding(mesh, P())
+
+        if shape.kind == "train":
+            opt_sds = jax.eval_shape(
+                lambda: adamw_init(params_sds, cfg.opt_dtype)
+            )
+            opt_sh = type(opt_sds)(
+                m=jax.tree.map(lambda s: s, params_sh),
+                v=jax.tree.map(lambda s: s, params_sh),
+            )
+            state_sds = TrainState(
+                step=jax.ShapeDtypeStruct((), jnp.int32),
+                params=params_sds,
+                opt=opt_sds,
+            )
+            state_sh = TrainState(step=repl, params=params_sh, opt=opt_sh)
+            batch_sds = make_batch_specs(cfg, shape)
+            batch_sh = {
+                k: NamedSharding(
+                    mesh,
+                    resolve_spec(
+                        ("batch",) + (None,) * (len(v.shape) - 1),
+                        v.shape, rules,
+                    ),
+                )
+                for k, v in batch_sds.items()
+            }
+            step_fn = make_train_step(cfg, api)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state_sds, batch_sds)
+        elif shape.kind == "prefill":
+            prefill, _ = make_serve_steps(cfg, api)
+            batch_sds = {
+                "tokens": jax.ShapeDtypeStruct(
+                    (shape.global_batch, shape.seq_len), jnp.int32
+                )
+            }
+            if cfg.is_encdec:
+                batch_sds["enc_input"] = jax.ShapeDtypeStruct(
+                    (shape.global_batch, cfg.enc_frames, cfg.d_model),
+                    jnp.float32,
+                )
+            batch_sh = {
+                k: NamedSharding(
+                    mesh,
+                    resolve_spec(
+                        ("batch",) + (None,) * (len(v.shape) - 1),
+                        v.shape, rules,
+                    ),
+                )
+                for k, v in batch_sds.items()
+            }
+            jitted = jax.jit(
+                prefill, in_shardings=(params_sh, batch_sh)
+            )
+            lowered = jitted.lower(params_sds, batch_sds)
+        else:  # decode
+            _, decode = make_serve_steps(cfg, api)
+            cache_sds = jax.eval_shape(
+                lambda: api.init_decode_cache(shape.global_batch, shape.seq_len)
+            )
+
+            def cache_spec_names(path_leaf_shape):
+                # KV caches: [units, B, S, kv, dh]; SSM h: [units, B, H, N, P]
+                # conv: [units, B, K-1, ch]
+                nd = len(path_leaf_shape)
+                if nd == 5 and path_leaf_shape[3] <= 64:
+                    return (None, "batch", "seq_shard", "kv_heads", None)
+                if nd == 5:
+                    return (None, "batch", "ssm_inner", None, None)
+                if nd == 4:
+                    return (None, "batch", None, "ssm_inner")
+                return (None,) * nd
+
+            cache_sh = jax.tree.map(
+                lambda s: NamedSharding(
+                    mesh, resolve_spec(cache_spec_names(s.shape), s.shape, rules)
+                ),
+                cache_sds,
+            )
+            tok_sds = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+            tok_sh = NamedSharding(
+                mesh, resolve_spec(("batch", None), tok_sds.shape, rules)
+            )
+            pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+            jitted = jax.jit(
+                decode,
+                in_shardings=(params_sh, cache_sh, tok_sh, repl),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(params_sds, cache_sds, tok_sds, pos_sds)
+
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_stats(hlo)
+        walked = analyze_hlo(hlo)  # trip-count-aware per-partition cost
+
+    n_dev = mesh.devices.size
+    rt = roofline_terms(
+        cfg, shape, n_devices=n_dev,
+        hlo_flops=walked.flops, hlo_bytes=walked.hbm_bytes,
+        collective_bytes=coll["total"]["bytes"],
+    )
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "status": "OK",
+        "n_devices": int(n_dev),
+        "compile_s": round(compile_s, 1),
+        "params_total": param_counts(cfg)["total"],
+        "params_active": param_counts(cfg)["active"],
+        # per-partition (per-chip) numbers
+        "flops": walked.flops,
+        "bytes_accessed": walked.hbm_bytes,
+        "xla_cost_flops_raw": float(cost.get("flops", 0.0)),
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(
+                getattr(mem, "generated_code_size_in_bytes", 0)
+            ),
+        },
+        "collectives": coll,
+        "roofline": {
+            "compute_s": rt.compute_s,
+            "memory_s": rt.memory_s,
+            "collective_s": rt.collective_s,
+            "bottleneck": rt.bottleneck,
+            "model_flops": rt.model_flops,
+            "useful_ratio": rt.useful_ratio,
+        },
+    }
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="pod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--no-flash-vjp", action="store_true",
+                    help="baseline attention backward (stashes S^2 tiles)")
+    args = ap.parse_args()
+    overrides = {"flash_vjp": False} if args.no_flash_vjp else None
+
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                for m in meshes:
+                    cells.append((arch, shape, m))
+    else:
+        assert args.arch and args.shape
+        for m in meshes:
+            cells.append((args.arch, args.shape, m))
+
+    os.makedirs(args.out, exist_ok=True)
+    ok = skip = fail = 0
+    for arch, shape, m in cells:
+        tag = f"{arch}__{shape}__{m}"
+        path = os.path.join(args.out, tag + ".json")
+        try:
+            rec = dryrun_cell(arch, shape, m, overrides)
+        except Exception as e:  # a failure here is a bug in our system
+            rec = {
+                "arch": arch, "shape": shape, "mesh": m,
+                "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:],
+            }
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        status = rec["status"]
+        ok += status == "OK"
+        skip += status == "SKIP"
+        fail += status == "FAIL"
+        extra = ""
+        if status == "OK":
+            extra = (
+                f" flops={rec['flops']:.3e}"
+                f" coll={rec['collectives']['total']['bytes']:.3e}B"
+                f" compile={rec['compile_s']}s"
+            )
+        elif status == "FAIL":
+            extra = " " + rec["error"][:160]
+        print(f"[{status}] {tag}{extra}", flush=True)
+    print(f"done: {ok} OK, {skip} SKIP, {fail} FAIL")
+    if fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

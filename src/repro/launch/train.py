@@ -1,0 +1,160 @@
+"""Training launcher: end-to-end driver with checkpoint/restart, failure
+injection, optional power management and gradient compression.
+
+CPU quickstart (reduced config):
+    python -m repro.launch.train --arch qwen3-4b --reduced --steps 50
+
+The same driver drives full configs on a real mesh: ``--mesh DxM`` builds a
+(data, model) mesh over the process's devices, shards the state via the
+model's logical spec tree, and runs the identical jitted step.  Preemption
+drill: ``--fail-at N`` kills the process state mid-run and resumes from the
+latest checkpoint, proving the restart path end to end.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.data.pipeline import SyntheticLMData
+from repro.models import build
+from repro.power.controller import PowerController
+from repro.power.power_model import DvfsModel, arch_power_profile
+from repro.pdn.tree import build_from_level_sizes
+from repro.sharding import default_rules, param_sharding, use_rules
+from repro.training import checkpoint as ckpt_lib
+from repro.training.compression import make_compressor
+from repro.training.step import init_train_state, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized config of the same family")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--mesh", default="1x1", help="DATAxMODEL axis sizes")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--power-managed", action="store_true",
+                    help="run the nvPAX control loop alongside training and "
+                         "report capped step-time multipliers")
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="simulate a crash at this step (restart drill)")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    api = build(cfg)
+
+    d, m = (int(x) for x in args.mesh.split("x"))
+    mesh = jax.make_mesh((d, m), ("data", "model"))
+    rules = default_rules(mesh)
+
+    data = SyntheticLMData(cfg.vocab, seed=0)
+    enc = (cfg.enc_frames, cfg.d_model) if cfg.is_encdec else None
+
+    with mesh, use_rules(rules):
+        state, specs = init_train_state(cfg, api, jax.random.key(0))
+        shardings = None
+        if d * m > 1:
+            p_sh = param_sharding(specs, state.params, rules)
+            state = state._replace(
+                params=jax.device_put(state.params, p_sh),
+                opt=state.opt._replace(
+                    m=jax.device_put(state.opt.m, p_sh),
+                    v=jax.device_put(state.opt.v, p_sh),
+                ),
+            )
+
+        start_step = 0
+        if args.resume and args.ckpt_dir:
+            latest = ckpt_lib.latest_step(args.ckpt_dir)
+            if latest is not None:
+                state = ckpt_lib.restore(args.ckpt_dir, latest, state)
+                start_step = latest
+                print(f"resumed from step {latest}")
+
+        grad_hook = None
+        comp_state = {}
+        if args.compress_grads:
+            init_err, apply = make_compressor()
+            comp_state["err"] = init_err(state.params)
+
+            def grad_hook(grads):  # error feedback threads host-side
+                g_hat, comp_state["err"] = apply(grads, comp_state["err"])
+                return g_hat
+
+        step_fn = jax.jit(
+            make_train_step(
+                cfg, api, lr=args.lr, warmup=10, total_steps=args.steps,
+                grad_postprocess=grad_hook,
+            )
+        )
+
+        controller = None
+        dvfs = DvfsModel()
+        if args.power_managed:
+            # one PDN "job slice": enough servers for this job's devices
+            pdn = build_from_level_sizes([2, 2], gpus_per_server=8)
+            controller = PowerController(pdn)
+            mean_w, burst_w, burst_p = arch_power_profile(cfg.family)
+
+        losses = []
+        t_start = time.time()
+        rng = np.random.default_rng(1)
+        for step in range(start_step, args.steps):
+            batch = {
+                k: jnp.asarray(v)
+                for k, v in data.batch(step, args.batch, args.seq, enc=enc).items()
+            }
+            state, metrics = step_fn(state, batch)
+            losses.append(float(metrics["loss"]))
+
+            slowdown = 1.0
+            if controller is not None:
+                draw = mean_w + burst_w * (
+                    rng.random(controller.pdn.n) < burst_p
+                )
+                res = controller.step(draw)
+                mult = dvfs.step_time_multiplier(res.allocation)
+                slowdown = float(mult.max())
+
+            if step % args.log_every == 0 or step == args.steps - 1:
+                msg = (f"step {step:5d}  loss {losses[-1]:.4f}  "
+                       f"gnorm {float(metrics['grad_norm']):.3f}")
+                if controller is not None:
+                    msg += f"  power-slowdown x{slowdown:.3f}"
+                print(msg, flush=True)
+
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                ckpt_lib.save(args.ckpt_dir, step + 1, state)
+
+            if args.fail_at is not None and step + 1 == args.fail_at:
+                print(f"simulating crash at step {step + 1}")
+                raise SystemExit(42)
+
+        dt = time.time() - t_start
+        print(
+            f"done: {args.steps - start_step} steps in {dt:.1f}s, "
+            f"loss {losses[0]:.4f} -> {losses[-1]:.4f}"
+        )
+        return losses
+
+
+if __name__ == "__main__":
+    main()

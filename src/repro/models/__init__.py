@@ -1,0 +1,53 @@
+"""Model zoo: functional JAX implementations of the assigned architectures.
+
+``build(cfg)`` returns a :class:`ModelApi` with uniform init / loss /
+prefill / decode entry points dispatching on the arch family (decoder-only
+LM vs encoder-decoder)."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+from repro.models import attention, blocks, common, encdec, lm, mlp, moe, ssm
+
+__all__ = ["ModelApi", "build"]
+
+
+class ModelApi(NamedTuple):
+    init: Callable  # (key) -> (params, specs)
+    loss: Callable  # (params, **inputs) -> (loss, metrics)
+    prefill: Callable | None
+    decode_step: Callable | None
+    init_decode_cache: Callable | None
+
+
+def build(cfg) -> ModelApi:
+    if cfg.is_encdec:
+        return ModelApi(
+            init=lambda key: encdec.init_encdec(key, cfg),
+            loss=lambda params, tokens, targets, enc_input: encdec.encdec_loss(
+                params, cfg, tokens, targets, enc_input
+            ),
+            prefill=lambda params, tokens, enc_input: encdec.encdec_prefill(
+                params, cfg, tokens, enc_input
+            ),
+            decode_step=lambda params, caches, tokens, pos: encdec.encdec_decode_step(
+                params, cfg, caches, tokens, pos
+            ),
+            init_decode_cache=lambda batch, seq: encdec.init_decode_cache(
+                cfg, batch, seq
+            ),
+        )
+    return ModelApi(
+        init=lambda key: lm.init_lm(key, cfg),
+        loss=lambda params, tokens, targets: lm.lm_loss(
+            params, cfg, tokens, targets
+        ),
+        prefill=lambda params, tokens: lm.lm_prefill(params, cfg, tokens),
+        decode_step=lambda params, caches, tokens, pos: lm.lm_decode_step(
+            params, cfg, caches, tokens, pos
+        ),
+        init_decode_cache=lambda batch, seq: lm.init_decode_cache(
+            cfg, batch, seq
+        ),
+    )

@@ -1,0 +1,228 @@
+"""GQA attention with qk-norm, partial rotary, blocked (flash-style)
+training path, and KV-cache decode path.
+
+The blocked path is the pure-JAX counterpart of the Pallas flash kernel in
+``repro.kernels.flash_attention`` (which targets TPU VMEM tiling and is
+validated against the same reference in interpret mode).  XLA path memory is
+O(q_chunk * kv_chunk) per head instead of O(S^2).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, init_dense, rms_norm, rope_freqs
+from repro.sharding import constrain
+
+__all__ = ["init_attn", "attn_train", "attn_decode", "init_kv_cache"]
+
+NEG_INF = -1e30
+
+
+def init_attn(key, cfg, *, cross=False):
+    D, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    dt = cfg.param_dtype
+    p = {
+        "wq": init_dense(ks[0], D, H * dh, dt),
+        "wk": init_dense(ks[1], D, KV * dh, dt),
+        "wv": init_dense(ks[2], D, KV * dh, dt),
+        "wo": init_dense(ks[3], H * dh, D, dt, scale=(H * dh) ** -0.5),
+    }
+    s = {
+        "wq": ("embed", "heads_merged"),
+        "wk": ("embed", "heads_merged"),
+        "wv": ("embed", "heads_merged"),
+        "wo": ("heads_merged", "embed"),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dt)
+        p["k_norm"] = jnp.ones((dh,), dt)
+        s["q_norm"] = ("pos_in_head",)
+        s["k_norm"] = ("pos_in_head",)
+    return p, s
+
+
+def _project_qkv(p, cfg, x, positions, *, rope=True):
+    B, S, D = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    cd = cfg.compute_dtype
+    q = (x @ p["wq"].astype(cd)).reshape(B, S, H, dh)
+    k = (x @ p["wk"].astype(cd)).reshape(B, S, KV, dh)
+    v = (x @ p["wv"].astype(cd)).reshape(B, S, KV, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope:
+        inv, rot = rope_freqs(dh, cfg.rope_frac, cfg.rope_theta)
+        q = apply_rope(q, positions, inv, rot)
+        k = apply_rope(k, positions, inv, rot)
+    q = constrain(q, "batch", None, "q_heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def _plain_attention(q, k, v, causal: bool, scale: float):
+    """Reference attention; used for short sequences."""
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    kq = jnp.repeat(k, rep, axis=2) if rep > 1 else k
+    vq = jnp.repeat(v, rep, axis=2) if rep > 1 else v
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kq) * scale
+    if causal:
+        Sk = kq.shape[1]
+        mask = jnp.tril(jnp.ones((S, Sk), bool), k=Sk - S)
+        logits = jnp.where(mask, logits, NEG_INF)
+    w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, vq)
+
+
+def _pick_chunk(seq: int, target: int) -> int:
+    """Largest divisor of ``seq`` that is <= ``target`` (so ragged lengths
+    like whisper's 1500 encoder frames block cleanly)."""
+    c = min(seq, target)
+    while seq % c:
+        c -= 1
+    return c
+
+
+def _blocked_attention(q, k, v, causal: bool, scale: float, chunk: int):
+    """Flash-style two-level scan with online softmax.
+
+    Memory per step: [B, H, qc, kc] logits only.  Equivalent to
+    ``_plain_attention`` to within fp tolerance (asserted in tests).
+    """
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    Sk = k.shape[1]
+    rep = H // KV
+    qc = _pick_chunk(S, chunk)
+    kc = _pick_chunk(Sk, chunk)
+    nq, nk = S // qc, Sk // kc
+
+    qs = q.reshape(B, nq, qc, H, dh).transpose(1, 0, 2, 3, 4)  # [nq,B,qc,H,dh]
+    ks = k.reshape(B, nk, kc, KV, dh).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, kc, KV, dh).transpose(1, 0, 2, 3, 4)
+
+    def q_step(_, qi_q):
+        qi, qb = qi_q  # qb: [B, qc, H, dh]
+
+        def kv_step(carry, ki_kv):
+            m, l, acc = carry
+            ki, kb, vb = ki_kv
+            kbh = jnp.repeat(kb, rep, axis=2) if rep > 1 else kb
+            vbh = jnp.repeat(vb, rep, axis=2) if rep > 1 else vb
+            logits = jnp.einsum("bqhd,bkhd->bhqk", qb, kbh) * scale
+            logits = logits.astype(jnp.float32)
+            if causal:
+                qpos = qi * qc + jnp.arange(qc) + (Sk - S)
+                kpos = ki * kc + jnp.arange(kc)
+                mask = qpos[:, None] >= kpos[None, :]
+                logits = jnp.where(mask[None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(qb.dtype), vbh
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, H, qc), jnp.float32)
+        a0 = jnp.zeros((B, H, qc, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), ks, vs)
+        )
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(qb.dtype)
+        return None, out.transpose(0, 2, 1, 3)  # [B, qc, H, dh]
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qs))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
+
+
+def attn_train(p, cfg, x, positions, *, causal=True, rope=True, memory=None):
+    """Full-sequence attention (training / prefill).
+
+    ``memory``: optional [B, F, D] cross-attention source (enc-dec decoder);
+    K/V are then projected from memory and no causal mask applies.
+    """
+    B, S, D = x.shape
+    dh = cfg.head_dim
+    scale = dh**-0.5
+    if memory is None:
+        q, k, v = _project_qkv(p, cfg, x, positions, rope=rope)
+    else:
+        q, _, _ = _project_qkv(p, cfg, x, positions, rope=rope)
+        mem_pos = jnp.zeros(memory.shape[:2], jnp.int32)
+        _, k, v = _project_qkv(p, cfg, memory, mem_pos, rope=False)
+        causal = False
+    Sk = k.shape[1]
+    if max(S, Sk) > cfg.attn_chunk:
+        if getattr(cfg, "flash_vjp", True):
+            # memory-optimal path: O(S*d) residuals, recompute-in-backward
+            # (§Perf hillclimb H1; _blocked_attention is the baseline)
+            from repro.models.flash_vjp import blocked_attention_mo
+
+            qc = _pick_chunk(S, cfg.attn_chunk)
+            kc = _pick_chunk(Sk, cfg.attn_chunk)
+            o = blocked_attention_mo(q, k, v, causal, scale, qc, kc)
+        else:
+            o = _blocked_attention(q, k, v, causal, scale, cfg.attn_chunk)
+    else:
+        o = _plain_attention(q, k, v, causal, scale)
+    o = o.reshape(B, S, cfg.n_heads * dh)
+    return o @ p["wo"].astype(cfg.compute_dtype), (k, v)
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # [B, S_max, KV, dh]
+    v: jnp.ndarray
+
+
+def init_kv_cache(cfg, batch, seq, dtype=None):
+    dt = dtype or cfg.compute_dtype
+    shape = (batch, seq, cfg.n_kv, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+
+
+def attn_decode(p, cfg, x, pos, cache: KVCache, *, rope=True):
+    """One-token decode against a KV cache.
+
+    ``x``: [B, 1, D]; ``pos``: scalar absolute position.  The cache holds
+    ``seq_len`` past positions; entries at index >= pos are masked out.
+    """
+    B, S1, D = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions, rope=rope)
+    # One-hot masked write instead of dynamic_update_slice: a dus at a
+    # traced position over the seq-SHARDED cache dim is not partitionable
+    # (GSPMD all-gathers the whole cache per step — measured 4.3 GB/step on
+    # long_500k; §Perf hillclimb H3b).  The masked write is elementwise in
+    # the sharded dim: zero collectives, one cache-sized HBM read+write.
+    onehot = (
+        jnp.arange(cache.k.shape[1]) == pos
+    )[None, :, None, None]
+    k_cache = jnp.where(onehot, k_new.astype(cache.k.dtype), cache.k)
+    v_cache = jnp.where(onehot, v_new.astype(cache.v.dtype), cache.v)
+    k_cache = constrain(k_cache, "batch", "seq_shard", None, None)
+    v_cache = constrain(v_cache, "batch", "seq_shard", None, None)
+    rep = H // KV
+    # grouped-GQA einsum: contracting against the UNrepeated cache keeps the
+    # seq sharding intact (jnp.repeat broke propagation and GSPMD fell back
+    # to all-gathering the full f32 cache — 4.3 GB/step on long_500k;
+    # §Perf hillclimb H3c)
+    qg = q.reshape(B, 1, KV, rep, dh)
+    logits = jnp.einsum("bqgrd,bsgd->bgrqs", qg, k_cache) * (dh**-0.5)
+    Smax = cache.k.shape[1]
+    valid = jnp.arange(Smax) <= pos
+    logits = jnp.where(valid[None, None, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    o = jnp.einsum("bgrqs,bsgd->bqgrd", w, v_cache).reshape(B, 1, H * dh)
+    return o @ p["wo"].astype(cfg.compute_dtype), KVCache(k_cache, v_cache)

@@ -1,0 +1,105 @@
+"""Decoder blocks: pre-norm residual wrappers composing attention / SSD
+mixers with dense / MoE feed-forwards, per the arch config's layer pattern."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, mlp, moe, ssm
+from repro.models.common import rms_norm
+
+__all__ = ["init_block", "block_train", "block_decode"]
+
+
+def init_block(key, cfg, pos: int, *, cross=False):
+    """One block at position ``pos`` within the repeating unit."""
+    kind = cfg.layer_kind(pos)
+    is_moe = cfg.layer_moe(pos)
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = cfg.param_dtype
+    p = {"ln1": jnp.ones((cfg.d_model,), dt)}
+    s = {"ln1": ("embed",)}
+    if kind == "attn":
+        p["attn"], s["attn"] = attention.init_attn(k1, cfg)
+    else:
+        p["ssd"], s["ssd"] = ssm.init_ssd(k1, cfg)
+    if cross:
+        p["ln_x"] = jnp.ones((cfg.d_model,), dt)
+        s["ln_x"] = ("embed",)
+        p["xattn"], s["xattn"] = attention.init_attn(k2, cfg, cross=True)
+    if is_moe:
+        p["ln2"] = jnp.ones((cfg.d_model,), dt)
+        s["ln2"] = ("embed",)
+        p["moe"], s["moe"] = moe.init_moe(k3, cfg)
+    elif cfg.d_ff > 0:
+        p["ln2"] = jnp.ones((cfg.d_model,), dt)
+        s["ln2"] = ("embed",)
+        p["mlp"], s["mlp"] = mlp.init_mlp(k3, cfg)
+    # d_ff == 0 (pure-SSM mamba2): mixer-only block, no FFN sublayer
+    return p, s
+
+
+def block_train(p, cfg, pos, x, positions, *, causal=True, rope=True,
+                memory=None, want_cache=False):
+    """Returns (x_out, aux_loss, cache_or_None)."""
+    kind = cfg.layer_kind(pos)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    cache = None
+    if kind == "attn":
+        o, kv = attention.attn_train(
+            p["attn"], cfg, h, positions, causal=causal, rope=rope
+        )
+        if want_cache:
+            cache = kv
+    else:
+        o, ssd_cache = ssm.ssd_train(p["ssd"], cfg, h)
+        if want_cache:
+            cache = ssd_cache
+    x = x + o
+    if "xattn" in p:
+        hx = rms_norm(x, p["ln_x"], cfg.norm_eps)
+        ox, _ = attention.attn_train(
+            p["xattn"], cfg, hx, positions, memory=memory, rope=False
+        )
+        x = x + ox
+    if "moe" in p:
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        o2, aux = moe.moe_apply(p["moe"], cfg, h2)
+        x = x + o2
+    elif "mlp" in p:
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + mlp.mlp_apply(p["mlp"], cfg, h2)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        aux = jnp.zeros((), jnp.float32)
+    return x, aux, cache
+
+
+def block_decode(p, cfg, pos, x, tok_pos, cache, *, rope=True, memory=None,
+                 xattn_cache=None):
+    """One-token step.  ``cache`` is a KVCache or SSMCache for this block."""
+    kind = cfg.layer_kind(pos)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        o, new_cache = attention.attn_decode(
+            p["attn"], cfg, h, tok_pos, cache, rope=rope
+        )
+    else:
+        o, new_cache = ssm.ssd_decode(p["ssd"], cfg, h, cache)
+    x = x + o
+    if "xattn" in p and memory is not None:
+        hx = rms_norm(x, p["ln_x"], cfg.norm_eps)
+        positions = jnp.zeros((x.shape[0], 1), jnp.int32)
+        ox, _ = attention.attn_train(
+            p["xattn"], cfg, hx, positions, memory=memory, rope=False
+        )
+        x = x + ox
+    if "moe" in p:
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        o2, _ = moe.moe_apply(p["moe"], cfg, h2)
+        x = x + o2
+    elif "mlp" in p:
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + mlp.mlp_apply(p["mlp"], cfg, h2)
+    return x, new_cache

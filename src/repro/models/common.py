@@ -1,0 +1,72 @@
+"""Shared model building blocks: norms, rotary embeddings, initializers.
+
+All modules are functional: ``init_*`` returns ``(params, specs)`` where
+``specs`` mirrors ``params`` with tuples of *logical* axis names consumed by
+:mod:`repro.sharding.logical`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm",
+    "init_dense",
+    "sinusoidal_positions",
+    "rope_freqs",
+    "apply_rope",
+    "softcap",
+]
+
+
+def rms_norm(x, g, eps=1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * g.astype(jnp.float32)).astype(dt)
+
+
+def init_dense(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else (d_in**-0.5)
+    return (jax.random.normal(key, (d_in, d_out), dtype) * scale).astype(dtype)
+
+
+def sinusoidal_positions(n_pos: int, d_model: int, dtype=jnp.float32):
+    """Whisper-style sinusoidal position embeddings [n_pos, d_model]."""
+    half = d_model // 2
+    freq = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half) / (half - 1))
+    args = jnp.arange(n_pos)[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(args), jnp.cos(args)], axis=-1).astype(dtype)
+
+
+def rope_freqs(head_dim: int, rope_frac: float, theta: float):
+    """Inverse frequencies for the rotated sub-dimension.
+
+    ``rope_frac < 1`` implements partial rotary (chatglm3's '2d RoPE': only
+    the first half of each head dim is rotated, the rest passes through).
+    """
+    rot = int(head_dim * rope_frac)
+    rot -= rot % 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x, positions, inv_freq, rot: int):
+    """x: [B, S, H, dh]; positions: [B, S] (absolute token positions)."""
+    if rot == 0:
+        return x
+    dt = x.dtype
+    xr, xp = x[..., :rot], x[..., rot:]
+    ang = positions[..., None].astype(jnp.float32) * inv_freq  # [B,S,rot/2]
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    xr = jnp.stack([r1, r2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([xr.astype(dt), xp], axis=-1)
+
+
+def softcap(x, cap: float):
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,187 @@
+"""Encoder-decoder backbone (whisper-family).
+
+The conv audio frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings [B, enc_frames, d_model] (what the two
+conv+GELU downsampling layers would produce).  Sinusoidal positions are
+added to both encoder frames and decoder tokens; attention uses no rotary.
+Norms are RMSNorm for uniformity with the rest of the zoo (substitution for
+whisper's LayerNorm recorded in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, blocks
+from repro.models.common import rms_norm, sinusoidal_positions
+from repro.sharding import constrain
+
+__all__ = [
+    "init_encdec",
+    "encode",
+    "encdec_loss",
+    "encdec_prefill",
+    "encdec_decode_step",
+    "init_decode_cache",
+]
+
+
+def init_encdec(key, cfg):
+    ke, kd, kemb, kh = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    params: dict[str, Any] = {
+        "tok_embed": jax.random.normal(kemb, (cfg.vocab, cfg.d_model), dt)
+        * 0.02,
+        "enc_norm": jnp.ones((cfg.d_model,), dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    specs: dict[str, Any] = {
+        "tok_embed": ("vocab", "embed"),
+        "enc_norm": ("embed",),
+        "final_norm": ("embed",),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(kh, (cfg.d_model, cfg.vocab), dt)
+            * cfg.d_model**-0.5
+        )
+        specs["lm_head"] = ("embed", "vocab")
+
+    def stack(k, n, cross):
+        ps, ss = [], None
+        for i in range(n):
+            p, ss = blocks.init_block(jax.random.fold_in(k, i), cfg, 0, cross=cross)
+            ps.append(p)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+        spec = jax.tree.map(
+            lambda names: ("unit",) + names, ss,
+            is_leaf=lambda v: isinstance(v, tuple),
+        )
+        return stacked, spec
+
+    params["enc"], specs["enc"] = stack(ke, cfg.enc_layers, False)
+    params["dec"], specs["dec"] = stack(kd, cfg.n_layers, True)
+    return params, specs
+
+
+def encode(params, cfg, enc_input):
+    """enc_input: stub frame embeddings [B, F, D] -> encoder memory."""
+    cd = cfg.compute_dtype
+    B, F, D = enc_input.shape
+    pos_emb = sinusoidal_positions(F, D, cd)
+    x = enc_input.astype(cd) + pos_emb[None]
+    x = constrain(x, "batch", "seq", "embed_act")
+    positions = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32), (B, F))
+
+    def apply_layer(p, x):
+        return blocks.block_train(
+            p, cfg, 0, x, positions, causal=False, rope=False
+        )[0]
+
+    if cfg.remat:
+        apply_layer = jax.checkpoint(apply_layer)
+
+    def body(x, layer_params):
+        return apply_layer(layer_params, x), None
+
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _decode_stack(params, cfg, x, positions, memory, want_cache=False):
+    def body(x, layer_params):
+        x, _, cache = blocks.block_train(
+            layer_params, cfg, 0, x, positions, causal=True, rope=False,
+            memory=memory, want_cache=want_cache,
+        )
+        return x, cache
+
+    if cfg.remat and not want_cache:
+        inner = lambda p, x: blocks.block_train(
+            p, cfg, 0, x, positions, causal=True, rope=False, memory=memory
+        )[0]
+        ck = jax.checkpoint(inner)
+        x, caches = jax.lax.scan(lambda x, p: (ck(p, x), None), x, params["dec"])
+    else:
+        x, caches = jax.lax.scan(body, x, params["dec"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), caches
+
+
+def _head(params, cfg):
+    if cfg.tie_embeddings:
+        return params["tok_embed"].T.astype(cfg.compute_dtype)
+    return params["lm_head"].astype(cfg.compute_dtype)
+
+
+def encdec_loss(params, cfg, tokens, targets, enc_input):
+    """Teacher-forced seq2seq cross-entropy (chunked over the sequence)."""
+    cd = cfg.compute_dtype
+    memory = encode(params, cfg, enc_input)
+    B, S = tokens.shape
+    pos_emb = sinusoidal_positions(S, cfg.d_model, cd)
+    x = params["tok_embed"].astype(cd)[tokens] + pos_emb[None]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    h, _ = _decode_stack(params, cfg, x, positions, memory)
+    W = _head(params, cfg)
+    C = min(cfg.loss_chunk, S)
+    n = S // C
+    hs = h.reshape(B, n, C, -1).transpose(1, 0, 2, 3)
+    ts = targets.reshape(B, n, C).transpose(1, 0, 2)
+
+    def step(acc, inp):
+        hc, tc = inp
+        logits = (hc @ W).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return acc + (lse - gold).sum(), None
+
+    total, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), (hs, ts))
+    loss = total / (B * S)
+    return loss, {"xent": loss}
+
+
+def init_decode_cache(cfg, batch, seq):
+    one = attention.init_kv_cache(cfg, batch, seq)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), one
+    )
+
+
+def encdec_prefill(params, cfg, tokens, enc_input):
+    memory = encode(params, cfg, enc_input)
+    cd = cfg.compute_dtype
+    B, S = tokens.shape
+    pos_emb = sinusoidal_positions(S, cfg.d_model, cd)
+    x = params["tok_embed"].astype(cd)[tokens] + pos_emb[None]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    h, caches = _decode_stack(params, cfg, x, positions, memory, want_cache=True)
+    logits = (h[:, -1:] @ _head(params, cfg)).astype(jnp.float32)
+    return logits, caches, memory
+
+
+def encdec_decode_step(params, cfg, caches, tokens, pos, memory=None):
+    """One decode step.  ``memory`` may be None (pure-LM benchmark cell):
+    cross-attention then attends a zero frame — shapes stay intact."""
+    cd = cfg.compute_dtype
+    B = tokens.shape[0]
+    if memory is None:
+        memory = jnp.zeros((B, 1, cfg.d_model), cd)
+    pos_row = sinusoidal_positions(2, cfg.d_model, cd)[0]
+    x = params["tok_embed"].astype(cd)[tokens] + pos_row[None, None]
+
+    def body(x, scanned):
+        layer_params, layer_cache = scanned
+        x, nc = blocks.block_decode(
+            layer_params, cfg, 0, x, pos, layer_cache, rope=False,
+            memory=memory,
+        )
+        return x, nc
+
+    x, new_caches = jax.lax.scan(body, x, (params["dec"], caches))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ _head(params, cfg)).astype(jnp.float32)
+    return logits, new_caches

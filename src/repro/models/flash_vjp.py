@@ -1,0 +1,202 @@
+"""Memory-optimal blocked attention with a hand-written VJP (§Perf
+hillclimb #1).
+
+The naive differentiable blocked attention (attention.py::_blocked_attention)
+lets jax's scan-VJP stash every per-chunk probability tile for the backward
+pass: O(S^2) f32 bytes per layer per microbatch — the dominant HBM-traffic
+term in every train/prefill cell of the baseline roofline (EXPERIMENTS.md
+§Perf, hypothesis H1).  This module implements the flash-attention backward
+instead: the forward saves only (out, logsumexp) — O(S*d) — and the
+backward RECOMPUTES each probability tile from q/k/v, trading ~30% more
+attention FLOPs (already a minority term) for the removal of the quadratic
+stash.
+
+Math (per q-chunk i, kv-chunk j, with row stats lse):
+    p_ij   = exp(q_i k_j^T * scale - lse_i)
+    dv_j  += p_ij^T do_i
+    dp_ij  = do_i v_j^T
+    ds_ij  = p_ij * (dp_ij - rowsum(do_i * out_i))
+    dq_i  += ds_ij k_j * scale
+    dk_j  += ds_ij^T q_i * scale
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["blocked_attention_mo"]
+
+NEG_INF = -1e30
+
+
+def _chunks(x, c, axis):
+    n = x.shape[axis] // c
+    shape = x.shape[:axis] + (n, c) + x.shape[axis + 1 :]
+    return x.reshape(shape)
+
+
+def _fwd_impl(q, k, v, causal, scale, qc, kc):
+    """Returns (out [B,S,H,dh], lse [B,H,S])."""
+    B, S, H, dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    nq, nk = S // qc, Sk // kc
+    off = Sk - S
+
+    qs = q.reshape(B, nq, qc, H, dh).transpose(1, 0, 2, 3, 4)
+    ks = k.reshape(B, nk, kc, KV, dh).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, kc, KV, dh).transpose(1, 0, 2, 3, 4)
+
+    def q_step(_, qi_q):
+        qi, qb = qi_q
+
+        def kv_step(carry, ki_kv):
+            m, l, acc = carry
+            ki, kb, vb = ki_kv
+            kbh = jnp.repeat(kb, rep, axis=2) if rep > 1 else kb
+            vbh = jnp.repeat(vb, rep, axis=2) if rep > 1 else vb
+            logits = jnp.einsum("bqhd,bkhd->bhqk", qb, kbh).astype(
+                jnp.float32
+            ) * scale
+            if causal:
+                qpos = qi * qc + off + jnp.arange(qc)
+                kpos = ki * kc + jnp.arange(kc)
+                mask = qpos[:, None] >= kpos[None, :]
+                logits = jnp.where(mask[None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(qb.dtype), vbh
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, H, qc), jnp.float32)
+        a0 = jnp.zeros((B, H, qc, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (jnp.arange(nk), ks, vs))
+        l = jnp.maximum(l, 1e-30)
+        out = (acc / l[..., None]).astype(qb.dtype)
+        lse = m + jnp.log(l)
+        return None, (out.transpose(0, 2, 1, 3), lse)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None, (jnp.arange(nq), qs))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
+    lse = lses.transpose(1, 2, 0, 3).reshape(B, H, S)
+    return out, lse
+
+
+def _bwd_impl(res, g, causal, scale, qc, kc):
+    q, k, v, out, lse = res
+    B, S, H, dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    nq, nk = S // qc, Sk // kc
+    off = Sk - S
+
+    do = g
+    # delta_i = rowsum(do * out)  [B,H,S]
+    delta = jnp.einsum("bqhd,bqhd->bhq", do.astype(jnp.float32),
+                       out.astype(jnp.float32))
+
+    qs = q.reshape(B, nq, qc, H, dh).transpose(1, 0, 2, 3, 4)
+    dos = do.reshape(B, nq, qc, H, dh).transpose(1, 0, 2, 3, 4)
+    lses = lse.reshape(B, H, nq, qc).transpose(2, 0, 1, 3)
+    deltas = delta.reshape(B, H, nq, qc).transpose(2, 0, 1, 3)
+    ks = k.reshape(B, nk, kc, KV, dh).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, kc, KV, dh).transpose(1, 0, 2, 3, 4)
+
+    def kv_step(carry, ki_kv):
+        """Outer loop over kv chunks accumulating dk, dv; inner over q."""
+        ki, kb, vb = ki_kv
+        kbh = jnp.repeat(kb, rep, axis=2) if rep > 1 else kb
+        vbh = jnp.repeat(vb, rep, axis=2) if rep > 1 else vb
+
+        def q_step(acc, qi_pack):
+            dkh_acc, dvh_acc = acc
+            qi, qb, dob, lseb, deltab = qi_pack
+            logits = jnp.einsum("bqhd,bkhd->bhqk", qb, kbh).astype(
+                jnp.float32
+            ) * scale
+            if causal:
+                qpos = qi * qc + off + jnp.arange(qc)
+                kpos = ki * kc + jnp.arange(kc)
+                mask = qpos[:, None] >= kpos[None, :]
+                logits = jnp.where(mask[None, None], logits, NEG_INF)
+            p = jnp.exp(logits - lseb[..., None])  # [B,H,qc,kc]
+            dv_part = jnp.einsum(
+                "bhqk,bqhd->bkhd", p.astype(dob.dtype), dob
+            )
+            dp = jnp.einsum("bqhd,bkhd->bhqk", dob, vbh).astype(jnp.float32)
+            ds = p * (dp - deltab[..., None]) * scale
+            dk_part = jnp.einsum(
+                "bhqk,bqhd->bkhd", ds.astype(qb.dtype), qb
+            )
+            return (dkh_acc + dk_part.astype(jnp.float32),
+                    dvh_acc + dv_part.astype(jnp.float32)), None
+
+        z = jnp.zeros((B, kc, H, dh), jnp.float32)
+        (dkh, dvh), _ = jax.lax.scan(
+            q_step, (z, z), (jnp.arange(nq), qs, dos, lses, deltas)
+        )
+        # fold grouped heads back onto kv heads
+        if rep > 1:
+            dkh = dkh.reshape(B, kc, KV, rep, dh).sum(3)
+            dvh = dvh.reshape(B, kc, KV, rep, dh).sum(3)
+        return None, (dkh, dvh)
+
+    _, (dks, dvs) = jax.lax.scan(kv_step, None, (jnp.arange(nk), ks, vs))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, Sk, KV, dh).astype(k.dtype)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, Sk, KV, dh).astype(v.dtype)
+
+    def q_grad_step(_, qi_pack):
+        qi, qb, dob, lseb, deltab = qi_pack
+
+        def kv_step2(dq_acc, ki_kv):
+            ki, kb, vb = ki_kv
+            kbh = jnp.repeat(kb, rep, axis=2) if rep > 1 else kb
+            vbh = jnp.repeat(vb, rep, axis=2) if rep > 1 else vb
+            logits = jnp.einsum("bqhd,bkhd->bhqk", qb, kbh).astype(
+                jnp.float32
+            ) * scale
+            if causal:
+                qpos = qi * qc + off + jnp.arange(qc)
+                kpos = ki * kc + jnp.arange(kc)
+                mask = qpos[:, None] >= kpos[None, :]
+                logits = jnp.where(mask[None, None], logits, NEG_INF)
+            p = jnp.exp(logits - lseb[..., None])
+            dp = jnp.einsum("bqhd,bkhd->bhqk", dob, vbh).astype(jnp.float32)
+            ds = p * (dp - deltab[..., None]) * scale
+            dq_part = jnp.einsum("bhqk,bkhd->bqhd", ds.astype(qb.dtype), kbh)
+            return dq_acc + dq_part.astype(jnp.float32), None
+
+        dq0 = jnp.zeros((B, qc, H, dh), jnp.float32)
+        dqb, _ = jax.lax.scan(kv_step2, dq0, (jnp.arange(nk), ks, vs))
+        return None, dqb
+
+    _, dqs = jax.lax.scan(q_grad_step, None, (jnp.arange(nq), qs, dos, lses, deltas))
+    dq = dqs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh).astype(q.dtype)
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def blocked_attention_mo(q, k, v, causal, scale, qc, kc):
+    out, _ = _fwd_impl(q, k, v, causal, scale, qc, kc)
+    return out
+
+
+def _mo_fwd(q, k, v, causal, scale, qc, kc):
+    out, lse = _fwd_impl(q, k, v, causal, scale, qc, kc)
+    return out, (q, k, v, out, lse)
+
+
+def _mo_bwd(causal, scale, qc, kc, res, g):
+    return _bwd_impl(res, g, causal, scale, qc, kc)
+
+
+blocked_attention_mo.defvjp(_mo_fwd, _mo_bwd)

@@ -1,0 +1,206 @@
+"""Decoder-only language model: scan-over-units composition, chunked
+vocab-sharded cross-entropy, prefill and decode entry points.
+
+Layer stacking: the arch's repeating unit (1 block for homogeneous stacks,
+8 for jamba's 7xMamba+1xAttn pattern) is unrolled inside a ``lax.scan`` over
+``n_units`` stacked parameter pytrees — HLO stays O(unit), activations for
+backprop are rematerialized per unit (``cfg.remat``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, blocks, ssm
+from repro.models.common import rms_norm
+from repro.sharding import constrain
+
+__all__ = [
+    "init_lm",
+    "lm_forward",
+    "lm_loss",
+    "lm_prefill",
+    "lm_decode_step",
+    "init_decode_cache",
+]
+
+
+def init_lm(key, cfg):
+    """Returns (params, specs).  Unit params are stacked [n_units, ...]."""
+    U, NU = cfg.unit_size, cfg.n_units
+    k_embed, k_head, k_units = jax.random.split(key, 3)
+    dt = cfg.param_dtype
+    params: dict[str, Any] = {
+        "tok_embed": jax.random.normal(k_embed, (cfg.vocab, cfg.d_model), dt)
+        * 0.02,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    specs: dict[str, Any] = {
+        "tok_embed": ("vocab", "embed"),
+        "final_norm": ("embed",),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(k_head, (cfg.d_model, cfg.vocab), dt)
+            * cfg.d_model**-0.5
+        )
+        specs["lm_head"] = ("embed", "vocab")
+
+    unit_p: dict[str, Any] = {}
+    unit_s: dict[str, Any] = {}
+    for pos in range(U):
+        kp = jax.random.fold_in(k_units, pos)
+        stacked = []
+        for u in range(NU):
+            p, s = blocks.init_block(jax.random.fold_in(kp, u), cfg, pos)
+            stacked.append(p)
+        unit_p[f"b{pos}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *stacked)
+        unit_s[f"b{pos}"] = jax.tree.map(
+            lambda names: ("unit",) + names,
+            s,
+            is_leaf=lambda v: isinstance(v, tuple),
+        )
+    params["unit"] = unit_p
+    specs["unit"] = unit_s
+    return params, specs
+
+
+def _unit_body(cfg, unit_params, x, positions, want_aux=True):
+    """Apply one unit (U blocks) to x."""
+    aux = jnp.zeros((), jnp.float32)
+    for pos in range(cfg.unit_size):
+        x, a, _ = blocks.block_train(
+            unit_params[f"b{pos}"], cfg, pos, x, positions
+        )
+        aux = aux + a
+    return x, aux
+
+
+def lm_forward(params, cfg, tokens):
+    """tokens [B,S] -> final hidden states [B,S,D] (+ MoE aux loss)."""
+    cd = cfg.compute_dtype
+    B, S = tokens.shape
+    x = params["tok_embed"].astype(cd)[tokens]
+    x = constrain(x, "batch", "seq", "embed_act")
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(carry, unit_params):
+        x, aux = carry
+        fn = functools.partial(_unit_body, cfg)
+        if cfg.remat:
+            fn = jax.checkpoint(fn, static_argnums=())
+        x, a = fn(unit_params, x, positions)
+        x = constrain(x, "batch", "seq", "embed_act")
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), params["unit"]
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux / max(cfg.n_layers, 1)
+
+
+def _head(params, cfg):
+    if cfg.tie_embeddings:
+        return params["tok_embed"].T.astype(cfg.compute_dtype)
+    return params["lm_head"].astype(cfg.compute_dtype)
+
+
+def lm_loss(params, cfg, tokens, targets):
+    """Mean next-token cross-entropy, computed in sequence chunks so the
+    [tokens, vocab] logits tensor never materializes for the full batch.
+    Returns (loss, metrics)."""
+    h, aux = lm_forward(params, cfg, tokens)
+    W = _head(params, cfg)
+    B, S, D = h.shape
+    C = min(cfg.loss_chunk, S)
+    assert S % C == 0
+    n = S // C
+    hs = h.reshape(B, n, C, D).transpose(1, 0, 2, 3)
+    ts = targets.reshape(B, n, C).transpose(1, 0, 2)
+
+    def step(acc, inp):
+        hc, tc = inp
+        logits = (hc @ W).astype(jnp.float32)  # [B,C,V]
+        logits = constrain(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return acc + (lse - gold).sum(), None
+
+    total, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), (hs, ts))
+    loss = total / (B * S)
+    moe_w = 0.01 if cfg.n_experts else 0.0
+    return loss + moe_w * aux, {"xent": loss, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def init_decode_cache(cfg, batch, seq):
+    """Per-unit-position stacked caches: KVCache [NU, ...] for attn
+    positions, SSMCache for SSD positions."""
+    NU = cfg.n_units
+    caches = {}
+    for pos in range(cfg.unit_size):
+        if cfg.layer_kind(pos) == "attn":
+            one = attention.init_kv_cache(cfg, batch, seq)
+        else:
+            one = ssm.init_ssm_cache(cfg, batch)
+        caches[f"b{pos}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (NU,) + x.shape), one
+        )
+    return caches
+
+
+def lm_prefill(params, cfg, tokens):
+    """Full forward over a prompt; returns (last-position logits, caches).
+
+    The per-block caches are collected through the unit scan.
+    """
+    cd = cfg.compute_dtype
+    B, S = tokens.shape
+    x = params["tok_embed"].astype(cd)[tokens]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(x, unit_params):
+        caches = {}
+        for pos in range(cfg.unit_size):
+            x, _, cache = blocks.block_train(
+                unit_params[f"b{pos}"], cfg, pos, x, positions,
+                want_cache=True,
+            )
+            caches[f"b{pos}"] = cache
+        return x, caches
+
+    x, caches = jax.lax.scan(body, x, params["unit"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, -1:] @ _head(params, cfg)).astype(jnp.float32)
+    return logits, caches
+
+
+def lm_decode_step(params, cfg, caches, tokens, pos):
+    """One decode step: tokens [B,1], pos scalar -> (logits, new caches)."""
+    cd = cfg.compute_dtype
+    x = params["tok_embed"].astype(cd)[tokens]
+
+    def body(x, scanned):
+        unit_params, unit_caches = scanned
+        new_caches = {}
+        for upos in range(cfg.unit_size):
+            x, nc = blocks.block_decode(
+                unit_params[f"b{upos}"], cfg, upos, x, pos,
+                unit_caches[f"b{upos}"],
+            )
+            new_caches[f"b{upos}"] = nc
+        return x, new_caches
+
+    x, new_caches = jax.lax.scan(body, x, (params["unit"], caches))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ _head(params, cfg)).astype(jnp.float32)
+    return logits, new_caches

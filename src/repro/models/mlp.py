@@ -1,0 +1,45 @@
+"""Dense feed-forward blocks: SwiGLU (modern LMs) and GELU (whisper)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import init_dense
+from repro.sharding import constrain
+
+__all__ = ["init_mlp", "mlp_apply"]
+
+
+def init_mlp(key, cfg):
+    D, F = cfg.d_model, cfg.d_ff
+    dt = cfg.param_dtype
+    if cfg.mlp_kind == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = {
+            "wg": init_dense(k1, D, F, dt),
+            "wu": init_dense(k2, D, F, dt),
+            "wd": init_dense(k3, F, D, dt, scale=F**-0.5),
+        }
+        s = {"wg": ("embed", "ff"), "wu": ("embed", "ff"), "wd": ("ff", "embed")}
+    else:  # gelu
+        k1, k2 = jax.random.split(key, 2)
+        p = {
+            "w1": init_dense(k1, D, F, dt),
+            "w2": init_dense(k2, F, D, dt, scale=F**-0.5),
+        }
+        s = {"w1": ("embed", "ff"), "w2": ("ff", "embed")}
+    return p, s
+
+
+def mlp_apply(p, cfg, x):
+    cd = cfg.compute_dtype
+    if cfg.mlp_kind == "swiglu":
+        g = x @ p["wg"].astype(cd)
+        u = x @ p["wu"].astype(cd)
+        h = jax.nn.silu(g) * u
+        h = constrain(h, "batch", None, "ff")
+        return h @ p["wd"].astype(cd)
+    h = jax.nn.gelu(x @ p["w1"].astype(cd))
+    h = constrain(h, "batch", None, "ff")
+    return h @ p["w2"].astype(cd)

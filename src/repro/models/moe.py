@@ -1,0 +1,107 @@
+"""Top-k mixture-of-experts FFN with GShard-style capacity dispatch.
+
+Routing is computed per (batch row x sequence chunk) so the position-in-
+capacity cumsum runs over an UNsharded axis — no cross-device prefix sums.
+Expert weights carry the "experts" logical axis (-> mesh "model" when the
+expert count divides it: jamba 16e, olmoe 64e; grok's 8e on a 16-way axis
+falls back to replicated experts with the "ff" dim sharded instead — both
+resolved by the divisibility-aware resolver, no per-arch code).
+
+Per chunk of C tokens: dispatch one-hot [B, C, E, cap] with
+cap = top_k * C * capacity_factor / E, so memory is O(B * C^2 * k) — bounded
+by cfg.moe_chunk, not the full sequence.  Combine contracts the expert axis
+-> exactly one all-reduce per MoE layer over [B, C, D] (same collective
+shape as tensor-parallel dense FFN).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import init_dense
+from repro.sharding import constrain
+
+__all__ = ["init_moe", "moe_apply"]
+
+
+def init_moe(key, cfg):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = cfg.param_dtype
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    p = {
+        "router": init_dense(k0, D, E, jnp.float32),  # router kept in f32
+        "wg": jax.random.normal(k1, (E, D, F), dt) * D**-0.5,
+        "wu": jax.random.normal(k2, (E, D, F), dt) * D**-0.5,
+        "wd": jax.random.normal(k3, (E, F, D), dt) * F**-0.5,
+    }
+    s = {
+        "router": ("embed", None),
+        "wg": ("experts", "embed", "ff"),
+        "wu": ("experts", "embed", "ff"),
+        "wd": ("experts", "ff", "embed"),
+    }
+    return p, s
+
+
+def _route(p, cfg, xc):
+    """Router for one chunk: xc [B, C, D] -> (weights, dispatch, aux).
+
+    dispatch: [B, C, E, cap] one-hot combine/dispatch mask (weighted for
+    combine); aux is the switch load-balancing loss for the chunk.
+    """
+    B, C, D = xc.shape
+    E, k = cfg.n_experts, cfg.top_k
+    cap = max(1, int(cfg.capacity_factor * k * C / E))
+    gates = jax.nn.softmax(
+        (xc.astype(jnp.float32) @ p["router"]), axis=-1
+    )  # [B,C,E]
+    topv, topi = jax.lax.top_k(gates, k)  # [B,C,k]
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) within its expert's capacity buffer:
+    # cumsum over the chunk's token axis (unsharded -> local compute)
+    sel = jax.nn.one_hot(topi, E, dtype=jnp.float32)  # [B,C,k,E]
+    # priority: iterate choices first so a token's top-1 beats others' top-2
+    sel_flat = sel.transpose(0, 2, 1, 3).reshape(B, k * C, E)
+    pos = jnp.cumsum(sel_flat, axis=1) - sel_flat  # [B,kC,E]
+    pos = pos.reshape(B, k, C, E).transpose(0, 2, 1, 3)  # [B,C,k,E]
+    keep = (pos < cap) * sel  # drop overflow
+    pos = jnp.clip(pos, 0, cap - 1).astype(jnp.int32)
+    cap_onehot = jax.nn.one_hot(pos, cap, dtype=jnp.float32)  # [B,C,k,E,cap]
+    disp = (keep[..., None] * cap_onehot).sum(2)  # [B,C,E,cap]
+    combine = (topv[..., None] * keep)[..., None] * cap_onehot
+    combine = combine.sum(2)  # [B,C,E,cap]
+
+    # switch aux loss: fraction routed * mean gate, per expert
+    frac = sel.sum(2).mean(1)  # [B,E] fraction of tokens per expert (top-k)
+    me = gates.mean(1)  # [B,E]
+    aux = (frac * me).sum(-1).mean() * E / k
+    return combine, disp, aux
+
+
+def moe_apply(p, cfg, x):
+    """x: [B, S, D] -> (y, aux_loss).  Scans sequence chunks."""
+    B, S, D = x.shape
+    C = min(cfg.moe_chunk, S)
+    assert S % C == 0, f"seq {S} not divisible by moe_chunk {C}"
+    n = S // C
+    cd = cfg.compute_dtype
+    wg, wu, wd = (p[k].astype(cd) for k in ("wg", "wu", "wd"))
+
+    def step(_, xc):
+        combine, disp, aux = _route(p, cfg, xc)
+        ein = jnp.einsum("bcek,bcd->bekd", disp.astype(cd), xc)
+        ein = constrain(ein, "batch", "experts", None, None)
+        h = jax.nn.silu(jnp.einsum("bekd,edf->bekf", ein, wg))
+        h = h * jnp.einsum("bekd,edf->bekf", ein, wu)
+        h = constrain(h, "batch", "experts", None, "ff")
+        yo = jnp.einsum("bekf,efd->bekd", h, wd)
+        yc = jnp.einsum("bekd,bcek->bcd", yo, combine.astype(cd))
+        yc = constrain(yc, "batch", None, None)
+        return None, (yc, aux)
+
+    xs = x.reshape(B, n, C, D).transpose(1, 0, 2, 3)
+    _, (ys, auxs) = jax.lax.scan(step, None, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, D)
+    return y, auxs.mean()

@@ -1,0 +1,213 @@
+"""Mamba-2 SSD (state-space duality) block: chunked training path and
+recurrent decode path.
+
+Implements the scalar-A SSD of arXiv:2405.21060 adapted to TPU idioms: the
+chunked algorithm is all batched einsums (MXU-friendly [Q, Q] and [N, P]
+contractions) plus one short ``lax.scan`` over chunks for the inter-chunk
+state carry.  Heads shard on the "model" mesh axis via the "ssm_inner"
+logical axis; the state carry [B, H, N, P] is head-sharded too, so decode
+needs no collectives at all.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import init_dense, rms_norm
+from repro.sharding import constrain
+
+__all__ = ["init_ssd", "ssd_train", "ssd_decode", "init_ssm_cache", "SSMCache"]
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_headdim
+    return d_inner, H, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_groups
+
+
+def init_ssd(key, cfg):
+    D = cfg.d_model
+    d_inner, H, P, N, G = _dims(cfg)
+    conv_ch = d_inner + 2 * G * N
+    d_proj = 2 * d_inner + 2 * G * N + H
+    ks = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    p = {
+        "in_proj": init_dense(ks[0], D, d_proj, dt),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch), dt) * 0.2,
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "Dp": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01))).astype(jnp.float32),
+        "norm_g": jnp.ones((d_inner,), dt),
+        "out_proj": init_dense(ks[2], d_inner, D, dt, scale=d_inner**-0.5),
+    }
+    s = {
+        "in_proj": ("embed", "ssm_inner"),
+        "conv_w": (None, "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "A_log": ("ssm_inner",),
+        "Dp": ("ssm_inner",),
+        "dt_bias": ("ssm_inner",),
+        "norm_g": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "embed"),
+    }
+    return p, s
+
+
+def _split_proj(p, cfg, x):
+    """x [B,S,D] -> z, xbc (pre-conv), dt_raw."""
+    d_inner, H, P, N, G = _dims(cfg)
+    cd = cfg.compute_dtype
+    proj = x @ p["in_proj"].astype(cd)
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner : d_inner + d_inner + 2 * G * N]
+    dt_raw = proj[..., -H:]
+    return z, xbc, dt_raw
+
+
+def _causal_conv(p, cfg, xbc):
+    """Depthwise causal conv1d over the sequence: [B,S,ch] -> [B,S,ch]."""
+    K = cfg.ssm_conv
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad,
+        p["conv_w"].astype(xbc.dtype)[:, None, :],  # [K, 1, ch]
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=xbc.shape[-1],
+    )
+    return jax.nn.silu(out + p["conv_b"].astype(xbc.dtype))
+
+
+def _ssd_scan(cfg, xh, dt, A, Bh, Ch):
+    """Chunked SSD: xh [B,S,H,P], dt [B,S,H] (post-softplus), A [H] (<0),
+    Bh/Ch [B,S,H,N].  Returns (y [B,S,H,P], final_state [B,H,N,P])."""
+    B, S, H, P = xh.shape
+    N = Bh.shape[-1]
+    Q = min(cfg.ssd_chunk, S)
+    assert S % Q == 0, f"seq {S} not divisible by ssd_chunk {Q}"
+    nc = S // Q
+
+    f32 = jnp.float32
+    a = (dt.astype(f32) * A.astype(f32)).reshape(B, nc, Q, H)
+    ac = jnp.cumsum(a, axis=2)  # [B,nc,Q,H]
+    a_last = ac[:, :, -1:, :]  # [B,nc,1,H]
+
+    Xc = xh.reshape(B, nc, Q, H, P)
+    Bc = Bh.reshape(B, nc, Q, H, N)
+    Cc = Ch.reshape(B, nc, Q, H, N)
+    dtc = dt.reshape(B, nc, Q, H).astype(f32)
+
+    # intra-chunk (quadratic in Q, MXU matmuls)
+    CB = jnp.einsum("bcihn,bcjhn->bchij", Cc.astype(f32), Bc.astype(f32))
+    decay = jnp.exp(ac[:, :, :, None, :].transpose(0, 1, 4, 2, 3)
+                    - ac[:, :, None, :, :].transpose(0, 1, 4, 2, 3))
+    # decay[b,c,h,i,j] = exp(ac_i - ac_j); mask j <= i
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    M = jnp.where(mask[None, None, None], CB * decay, 0.0)
+    M = M * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]  # weight by dt_j
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", M, Xc.astype(f32))
+
+    # chunk summaries: state contribution of each chunk
+    decay_to_end = jnp.exp(a_last - ac)  # [B,nc,Q,H]
+    Bw = Bc.astype(f32) * (dtc * decay_to_end)[..., None]
+    T = jnp.einsum("bcjhn,bcjhp->bchnp", Bw, Xc.astype(f32))  # [B,nc,H,N,P]
+
+    # inter-chunk recurrence
+    def step(h, inp):
+        Tc, al, Cck, ack = inp  # [B,H,N,P], [B,1,H], [B,Q,H,N], [B,Q,H]
+        y_in = jnp.einsum(
+            "bihn,bhnp->bihp", Cck.astype(f32) * jnp.exp(ack)[..., None], h
+        )
+        h_next = h * jnp.exp(al).transpose(0, 2, 1)[..., None] + Tc
+        return h_next, y_in
+
+    h0 = jnp.zeros((B, H, N, P), f32)
+    xs = (
+        T.transpose(1, 0, 2, 3, 4),
+        a_last.transpose(1, 0, 2, 3),
+        Cc.transpose(1, 0, 2, 3, 4),
+        ac.transpose(1, 0, 2, 3),
+    )
+    h_final, y_inter = jax.lax.scan(step, h0, xs)
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4)  # [B,nc,Q,H,P]
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    return y, h_final
+
+
+class SSMCache(NamedTuple):
+    h: jnp.ndarray  # [B, H, N, P] f32 state
+    conv: jnp.ndarray  # [B, K-1, conv_ch] rolling conv input buffer
+
+
+def init_ssm_cache(cfg, batch, dtype=None):
+    d_inner, H, P, N, G = _dims(cfg)
+    conv_ch = d_inner + 2 * G * N
+    dt = dtype or cfg.compute_dtype
+    return SSMCache(
+        h=jnp.zeros((batch, H, N, P), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dt),
+    )
+
+
+def ssd_train(p, cfg, x):
+    """x: [B,S,D] -> (y [B,S,D], SSMCache for decode continuation)."""
+    d_inner, H, P, N, G = _dims(cfg)
+    cd = cfg.compute_dtype
+    z, xbc_pre, dt_raw = _split_proj(p, cfg, x)
+    xbc = _causal_conv(p, cfg, xbc_pre)
+    xh = xbc[..., :d_inner]
+    Bm = xbc[..., d_inner : d_inner + G * N]
+    Cm = xbc[..., d_inner + G * N :]
+    B_, S, _ = x.shape
+    xh = xh.reshape(B_, S, H, P)
+    xh = constrain(xh, "batch", None, "ssm_inner", None)
+    rep = H // G
+    Bh = jnp.repeat(Bm.reshape(B_, S, G, N), rep, axis=2)
+    Ch = jnp.repeat(Cm.reshape(B_, S, G, N), rep, axis=2)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, h_final = _ssd_scan(cfg, xh, dt, A, Bh, Ch)
+    y = y + p["Dp"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B_, S, d_inner).astype(cd)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_g"], cfg.norm_eps)
+    cache = SSMCache(h=h_final, conv=xbc_pre[:, S - (cfg.ssm_conv - 1) :, :])
+    return y @ p["out_proj"].astype(cd), cache
+
+
+def ssd_decode(p, cfg, x, cache: SSMCache):
+    """One-token recurrent step.  x: [B,1,D] -> (y [B,1,D], new cache)."""
+    d_inner, H, P, N, G = _dims(cfg)
+    cd = cfg.compute_dtype
+    f32 = jnp.float32
+    z, xbc_new, dt_raw = _split_proj(p, cfg, x)  # [B,1,...]
+    # rolling conv buffer: [B, K-1, ch] + new -> conv over last K inputs
+    window = jnp.concatenate([cache.conv, xbc_new.astype(cache.conv.dtype)], 1)
+    w = p["conv_w"].astype(cd)  # [K, ch]
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(cd), w) + p[
+        "conv_b"
+    ].astype(cd)
+    xbc = jax.nn.silu(conv_out)[:, None, :]  # [B,1,ch]
+    new_conv = window[:, 1:, :]
+
+    xh = xbc[..., :d_inner].reshape(-1, H, P)
+    Bm = xbc[..., d_inner : d_inner + G * N].reshape(-1, G, N)
+    Cm = xbc[..., d_inner + G * N :].reshape(-1, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(f32)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(f32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(f32) + p["dt_bias"])  # [B,H]
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)  # [B,H]
+    h = cache.h * dA[..., None, None] + jnp.einsum(
+        "bhn,bhp->bhnp", Bh * dt[..., None], xh.astype(f32)
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, h) + p["Dp"][None, :, None] * xh.astype(f32)
+    y = y.reshape(-1, 1, d_inner).astype(cd)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_g"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(cd), SSMCache(h=h, conv=new_conv)

@@ -1,0 +1,15 @@
+from repro.pdn.tree import (
+    FlatPDN,
+    PDNNode,
+    build_datacenter,
+    build_from_level_sizes,
+    flatten,
+)
+
+__all__ = [
+    "FlatPDN",
+    "PDNNode",
+    "build_datacenter",
+    "build_from_level_sizes",
+    "flatten",
+]

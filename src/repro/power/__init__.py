@@ -1,0 +1,14 @@
+from repro.power.controller import ControllerConfig, PowerController
+from repro.power.power_model import DvfsModel, arch_power_profile
+from repro.power.simulator import DatacenterSim
+from repro.power.straggler import job_slowdowns, straggler_report
+
+__all__ = [
+    "ControllerConfig",
+    "DatacenterSim",
+    "DvfsModel",
+    "PowerController",
+    "arch_power_profile",
+    "job_slowdowns",
+    "straggler_report",
+]

@@ -1,0 +1,128 @@
+"""Closed-loop power controller (the paper's deployment shape, section 3).
+
+Every control interval (30 s in the paper) the controller:
+  1. collects per-device power telemetry (or job-model predictions),
+  2. classifies active/idle (scheduler info when available, else the
+     150 W power threshold),
+  3. builds the constraint problem (PDN tree + tenant SLAs + priorities),
+  4. runs nvPAX (warm-started from the previous step),
+  5. returns enforceable per-device caps.
+
+Fault handling follows the paper: device failures and supply drops are
+handled implicitly — the next cycle simply rebuilds the problem from
+current state (failed devices are masked to zero-width boxes; a supply
+drop rescales node capacities) and recomputes a feasible allocation from
+scratch.  No controller state must survive a crash: the warm-start is an
+optimization, not a correctness dependency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import dataclasses as _dc
+import time
+from typing import Any
+
+import numpy as np
+
+from repro.core.nvpax import AllocResult, NvpaxOptions, optimize
+from repro.core.problem import AllocProblem
+from repro.core.treeops import SlaTopo
+from repro.pdn.tree import FlatPDN
+
+__all__ = ["ControllerConfig", "PowerController"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerConfig:
+    idle_threshold: float = 150.0
+    interval_s: float = 30.0
+    options: NvpaxOptions = dataclasses.field(default_factory=NvpaxOptions)
+    # request headroom: caps are set slightly above measured power so jobs
+    # can ramp between control steps (PRS-style reservation steering)
+    request_margin: float = 1.05
+
+
+class PowerController:
+    def __init__(
+        self,
+        pdn: FlatPDN,
+        *,
+        sla: SlaTopo | None = None,
+        priority: np.ndarray | None = None,
+        config: ControllerConfig | None = None,
+    ):
+        self.pdn = pdn
+        self.sla = sla
+        self.priority = priority
+        self.config = config or ControllerConfig()
+        self._warm = None
+        self.failed = np.zeros(pdn.n, dtype=bool)
+        self.supply_scale = 1.0
+        self.history: list[dict[str, Any]] = []
+
+    # -- fault events ------------------------------------------------------
+
+    def fail_devices(self, idx) -> None:
+        """Mark devices failed; they are excluded from allocation (pinned to
+        zero power via a degenerate box) starting next control step."""
+        self.failed[np.asarray(idx)] = True
+        self._warm = None  # geometry changed; cold-start the next solve
+
+    def restore_devices(self, idx) -> None:
+        self.failed[np.asarray(idx)] = False
+        self._warm = None
+
+    def set_supply_scale(self, scale: float) -> None:
+        """Utility feed reduction (e.g. grid event): all node capacities are
+        scaled at problem-build time next step."""
+        self.supply_scale = float(scale)
+        self._warm = None
+
+    # -- main loop ---------------------------------------------------------
+
+    def step(
+        self,
+        telemetry: np.ndarray,
+        *,
+        active: np.ndarray | None = None,
+    ) -> AllocResult:
+        """One control step: telemetry [n] watts -> allocation (caps)."""
+        cfg = self.config
+        pdn = self.pdn
+        requests = np.asarray(telemetry, dtype=np.float64) * cfg.request_margin
+
+        # failed devices: force idle with a zero-power box by shrinking the
+        # request; the box itself must stay [l, u] to keep the PDN feasible,
+        # so failed devices are pinned at l and reported as unusable.
+        req = np.where(self.failed, 0.0, requests)
+        if active is not None:
+            active = np.asarray(active, bool) & ~self.failed
+
+        pdn_eff = pdn
+        if self.supply_scale != 1.0:
+            pdn_eff = _dc.replace(
+                pdn, node_cap=pdn.node_cap * self.supply_scale
+            )
+
+        ap = AllocProblem.build(
+            pdn_eff,
+            req,
+            active=active,
+            idle_threshold=cfg.idle_threshold,
+            sla=self.sla,
+            priority=self.priority,
+        )
+        t0 = time.perf_counter()
+        res = optimize(ap, cfg.options, warm=self._warm)
+        wall = time.perf_counter() - t0
+        self._warm = res.warm_state
+        self.history.append(
+            {
+                "wall_s": wall,
+                "converged": res.stats["converged"],
+                "solves": res.stats["total_solves"],
+                "iterations": res.stats["total_iterations"],
+            }
+        )
+        return res

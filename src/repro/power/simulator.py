@@ -1,0 +1,76 @@
+"""Trace-driven datacenter simulation: telemetry -> controller -> caps ->
+job throughput.  This is the large-scale experiment harness behind the
+paper's section 5 (and our benchmarks/), extended with the performance
+feedback loop the paper motivates but does not model: caps map to clocks
+(DVFS) and synchronous jobs run at their slowest member's clock.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.core.greedy import greedy_allocate, static_allocate
+from repro.core.metrics import satisfaction_ratio
+from repro.pdn.telemetry import TelemetrySim, TraceConfig
+from repro.pdn.tree import FlatPDN
+from repro.power.controller import ControllerConfig, PowerController
+from repro.power.power_model import DvfsModel
+from repro.power.straggler import straggler_report
+
+__all__ = ["DatacenterSim"]
+
+
+@dataclasses.dataclass
+class DatacenterSim:
+    pdn: FlatPDN
+    trace: TelemetrySim
+    controller: PowerController
+    dvfs: DvfsModel = dataclasses.field(default_factory=DvfsModel)
+
+    @classmethod
+    def build(cls, pdn: FlatPDN, *, seed: int = 0,
+              controller: PowerController | None = None,
+              trace_cfg: TraceConfig | None = None) -> "DatacenterSim":
+        trace = TelemetrySim(
+            trace_cfg or TraceConfig(n_devices=pdn.n, seed=seed)
+        )
+        ctrl = controller or PowerController(pdn)
+        return cls(pdn=pdn, trace=trace, controller=ctrl)
+
+    def run(self, steps: int, *, start: int = 0, baselines: bool = True,
+            use_scheduler_state: bool = True) -> dict[str, Any]:
+        """Run ``steps`` control intervals; returns per-step metric arrays."""
+        out: dict[str, list] = {
+            "S_nvpax": [], "S_static": [], "S_greedy": [],
+            "wall_ms": [], "straggler_tax": [],
+        }
+        for t in range(start, start + steps):
+            power = self.trace.power(t)
+            active = (
+                self.trace.active_mask(t) if use_scheduler_state else None
+            )
+            res = self.controller.step(power, active=active)
+            r = np.clip(power, self.pdn.dev_l, self.pdn.dev_u)
+            r = np.where(
+                active if active is not None
+                else power >= self.controller.config.idle_threshold,
+                r, self.pdn.dev_l,
+            )
+            out["S_nvpax"].append(satisfaction_ratio(r, res.allocation))
+            out["wall_ms"].append(
+                1000 * self.controller.history[-1]["wall_s"]
+            )
+            rep = straggler_report(res.allocation, self.trace.job_of,
+                                   self.dvfs)
+            out["straggler_tax"].append(rep["mean_tax"])
+            if baselines:
+                out["S_static"].append(
+                    satisfaction_ratio(r, static_allocate(self.pdn))
+                )
+                out["S_greedy"].append(
+                    satisfaction_ratio(r, greedy_allocate(self.pdn, power))
+                )
+        return {k: np.asarray(v) for k, v in out.items() if v}

@@ -1,0 +1,19 @@
+from repro.sharding.logical import (
+    AxisRules,
+    constrain,
+    current_rules,
+    default_rules,
+    param_sharding,
+    resolve_spec,
+    use_rules,
+)
+
+__all__ = [
+    "AxisRules",
+    "constrain",
+    "current_rules",
+    "default_rules",
+    "param_sharding",
+    "resolve_spec",
+    "use_rules",
+]

@@ -1,0 +1,14 @@
+from repro.training.optimizer import AdamWState, adamw_init, adamw_update
+from repro.training.schedule import cosine_schedule
+from repro.training.state import TrainState
+from repro.training.step import make_serve_steps, make_train_step
+
+__all__ = [
+    "AdamWState",
+    "TrainState",
+    "adamw_init",
+    "adamw_update",
+    "cosine_schedule",
+    "make_serve_steps",
+    "make_train_step",
+]

@@ -1,0 +1,76 @@
+"""AdamW with decoupled weight decay, global-norm clipping, and a
+configurable moment dtype (bf16 moments fit grok-1's 314B-parameter state
+on a single 256-chip pod — DESIGN.md section 7)."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "clip_by_global_norm"]
+
+
+class AdamWState(NamedTuple):
+    m: dict
+    v: dict
+
+
+def adamw_init(params, dtype=jnp.float32) -> AdamWState:
+    z = lambda p: jnp.zeros(p.shape, dtype)
+    return AdamWState(
+        m=jax.tree.map(z, params),
+        v=jax.tree.map(z, params),
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves)
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def adamw_update(
+    grads,
+    opt: AdamWState,
+    params,
+    *,
+    step,
+    lr,
+    b1=0.9,
+    b2=0.95,
+    eps=1e-8,
+    weight_decay=0.1,
+    max_grad_norm=1.0,
+):
+    """Returns (new_params, new_opt, grad_norm)."""
+    grads, gn = clip_by_global_norm(grads, max_grad_norm)
+    t = (step + 1).astype(jnp.float32)
+    c1 = 1.0 - b1**t
+    c2 = 1.0 - b2**t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        mhat = m_new / c1
+        vhat = v_new / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(
+            jnp.float32
+        )
+        p_new = p.astype(jnp.float32) - lr * delta
+        return (
+            p_new.astype(p.dtype),
+            m_new.astype(m.dtype),
+            v_new.astype(v.dtype),
+        )
+
+    out = jax.tree.map(upd, params, grads, opt.m, opt.v)
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(new_m, new_v), gn

@@ -1,0 +1,108 @@
+"""GPipe-style pipeline parallelism over a mesh axis (shard_map).
+
+At 1000+ node scale, pipeline stages across pods complement FSDP+TP within
+a pod: activations cross the inter-pod links once per stage boundary
+instead of every layer's gradients crossing in the DP all-reduce.  This
+module implements the schedule with jax-native collectives:
+
+* the layer stack is split into ``n_stages`` contiguous stages; stage s
+  lives on mesh coordinate s of ``axis`` (each device holds only its
+  stage's parameters — the shard_map sees them unreplicated);
+* GPipe schedule: with M microbatches and P stages, ``M + P - 1`` ticks;
+  at tick t, stage s runs microbatch ``t - s`` (if in range) and then every
+  stage ``ppermute``s its activation to stage s+1;
+* the last stage collects its outputs; losses reduce over microbatches.
+
+This is the forward schedule (inference/eval pipelines and the dry-run
+collective pattern); the 1F1B training variant composes the same
+primitives and is left as future work (DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+__all__ = ["pipeline_forward"]
+
+
+def pipeline_forward(mesh: Mesh, axis: str, stage_fn, n_microbatches: int):
+    """Build a pipelined forward over ``axis``.
+
+    ``stage_fn(stage_params, x) -> x`` applies ONE stage's layers.
+    Returns ``f(stacked_stage_params, batch) -> outputs`` where
+    ``stacked_stage_params`` has a leading [n_stages] dim (sharded over
+    ``axis``) and ``batch`` has a leading microbatch dim [M, mb, ...]
+    (replicated along ``axis``).
+    """
+    n_stages = mesh.shape[axis]
+
+    def run(stage_params, batch):
+        # inside shard_map: stage_params [1, ...] (this stage's slice);
+        # batch [M, mb, d] full (replicated over the pipeline axis)
+        sp = jax.tree.map(lambda p: p[0], stage_params)
+        stage = jax.lax.axis_index(axis)
+        M = batch.shape[0]
+        ticks = M + n_stages - 1
+        mb_shape = batch.shape[1:]
+
+        def tick(carry, t):
+            inflight, outputs = carry
+            # stage 0 ingests microbatch t (if any); others take the
+            # activation handed over from stage-1 at the end of last tick
+            m_in = t - stage
+            take_new = (stage == 0) & (t < M)
+            x_in = jnp.where(
+                take_new,
+                batch[jnp.clip(t, 0, M - 1)],
+                inflight,
+            )
+            active = (m_in >= 0) & (m_in < M)
+            y = stage_fn(sp, x_in)
+            y = jnp.where(active, y, x_in)
+            # last stage banks its result for microbatch m_in
+            is_last = stage == n_stages - 1
+            bank = is_last & active
+            outputs = jnp.where(
+                bank,
+                jax.lax.dynamic_update_index_in_dim(
+                    outputs, y, jnp.clip(m_in, 0, M - 1), 0
+                ),
+                outputs,
+            )
+            # hand activations forward around the ring
+            nxt = jax.lax.ppermute(
+                y, axis, [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            )
+            return (nxt, outputs), None
+
+        inflight0 = jax.lax.pcast(
+            jnp.zeros(mb_shape, batch.dtype), (axis,), to="varying"
+        )
+        outputs0 = jax.lax.pcast(
+            jnp.zeros((M,) + mb_shape, batch.dtype), (axis,), to="varying"
+        )
+        (_, outputs), _ = jax.lax.scan(
+            tick, (inflight0, outputs0), jnp.arange(ticks)
+        )
+        # every stage returns [M, ...]; only the last stage's bank is real.
+        # broadcast it back (one more ring rotation to stage 0 = cheap) via
+        # psum of masked banks so callers see replicated outputs.
+        mask = (stage == n_stages - 1).astype(outputs.dtype)
+        return jax.lax.psum(outputs * mask, axis)
+
+    def apply(stacked_stage_params, batch):
+        in_specs_params = jax.tree.map(lambda _: P(axis), stacked_stage_params)
+        g = shard_map(
+            run,
+            mesh=mesh,
+            in_specs=(in_specs_params, P()),
+            out_specs=P(),
+        )
+        return g(stacked_stage_params, batch)
+
+    return apply

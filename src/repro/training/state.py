@@ -1,0 +1,17 @@
+"""Train-state pytree."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax.numpy as jnp
+
+from repro.training.optimizer import AdamWState
+
+__all__ = ["TrainState"]
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray  # scalar int32
+    params: Any
+    opt: AdamWState

@@ -1,0 +1,119 @@
+"""Train / serve step factories.
+
+``make_train_step`` builds the jitted training step: microbatched gradient
+accumulation (``cfg.microbatch``), per-unit rematerialization (inside the
+model), global-norm clipping, AdamW, and LR scheduling.  The returned
+function has signature ``(state, batch) -> (state, metrics)`` and is pjit-
+compatible: callers shard ``state`` via the model's spec tree and ``batch``
+via the "batch" logical axis.
+
+``make_serve_steps`` builds (prefill, decode_step) for inference cells.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optimizer import adamw_init, adamw_update
+from repro.training.schedule import cosine_schedule
+from repro.training.state import TrainState
+
+__all__ = ["make_train_step", "make_serve_steps", "init_train_state"]
+
+
+def init_train_state(cfg, api, key) -> tuple[TrainState, Any]:
+    params, specs = api.init(key)
+    opt = adamw_init(params, cfg.opt_dtype)
+    state = TrainState(step=jnp.zeros((), jnp.int32), params=params, opt=opt)
+    return state, specs
+
+
+def make_train_step(
+    cfg,
+    api,
+    *,
+    lr: float = 3e-4,
+    warmup: int = 100,
+    total_steps: int = 10_000,
+    grad_postprocess: Callable | None = None,
+) -> Callable:
+    """``grad_postprocess``: optional hook applied to the accumulated grads
+    before the optimizer (e.g. int8 error-feedback compression)."""
+    schedule = cosine_schedule(lr, warmup, total_steps)
+
+    def loss_fn(params, batch):
+        loss, metrics = api.loss(params, **batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch):
+        mb = max(cfg.microbatch, 1)
+
+        if mb == 1:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+        else:
+            # split the batch leading dim into microbatches and accumulate
+            def resplit(x):
+                b = x.shape[0]
+                assert b % mb == 0, f"batch {b} not divisible by microbatch {mb}"
+                return x.reshape(mb, b // mb, *x.shape[1:])
+
+            micro = jax.tree.map(resplit, batch)
+
+            def acc_step(carry, mb_batch):
+                g_acc, l_acc = carry
+                (l, m), g = grad_fn(state.params, mb_batch)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), m
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            (grads, loss), metrics = jax.lax.scan(
+                acc_step, (g0, jnp.zeros((), jnp.float32)), micro
+            )
+            grads = jax.tree.map(lambda g: g / mb, grads)
+            loss = loss / mb
+            metrics = jax.tree.map(lambda x: x.mean(), metrics)
+
+        if grad_postprocess is not None:
+            grads = grad_postprocess(grads)
+
+        new_params, new_opt, gn = adamw_update(
+            grads, state.opt, state.params, step=state.step,
+            lr=schedule(state.step),
+        )
+        new_state = TrainState(
+            step=state.step + 1, params=new_params, opt=new_opt
+        )
+        out_metrics = {
+            "loss": loss,
+            "grad_norm": gn,
+            **{k: v for k, v in metrics.items()},
+        }
+        return new_state, out_metrics
+
+    return train_step
+
+
+def make_serve_steps(cfg, api):
+    """(prefill_fn, decode_fn) with uniform signatures for the launcher.
+
+    prefill: (params, batch_dict) -> (logits, caches[, memory])
+    decode:  (params, caches, tokens, pos) -> (logits, caches)
+    """
+
+    def prefill(params, batch):
+        if cfg.is_encdec:
+            return api.prefill(params, batch["tokens"], batch["enc_input"])
+        return api.prefill(params, batch["tokens"])
+
+    def decode(params, caches, tokens, pos):
+        return api.decode_step(params, caches, tokens, pos)
+
+    return prefill, decode

@@ -1,0 +1,57 @@
+"""Synthetic telemetry + hierarchy generators."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.pdn.hierarchy_gen import random_hierarchy
+from repro.pdn.telemetry import TelemetrySim, TraceConfig
+from repro.pdn.tree import build_datacenter
+
+
+def test_trace_deterministic():
+    cfg = TraceConfig(n_devices=128, seed=7)
+    a = TelemetrySim(cfg).power(42)
+    b = TelemetrySim(cfg).power(42)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_trace_bands():
+    cfg = TraceConfig(n_devices=512, seed=0)
+    sim = TelemetrySim(cfg)
+    p = sim.trace(20)
+    assert p.shape == (20, 512)
+    assert (p > 0).all()
+    # idle devices exist and sit below the 150 W classifier threshold
+    frac_idle = (p < 150.0).mean()
+    assert 0.02 < frac_idle < 0.4
+
+
+def test_job_synchronization():
+    """Devices in the same job move together (straggler motivation)."""
+    cfg = TraceConfig(n_devices=256, seed=3, mean_job_size=32)
+    sim = TelemetrySim(cfg)
+    p = sim.power(5)
+    job0 = sim.job_of == sim.job_of[0]
+    if job0.sum() >= 4 and p[job0].min() > 150:
+        assert p[job0].std() < 40.0  # tight within-job spread
+
+
+def test_paper_geometry():
+    pdn = build_datacenter()
+    assert pdn.n > 12_000
+    assert abs(pdn.oversubscription_ratio() - 1.63) < 0.01  # paper: ~1.63
+    # four halls
+    assert (pdn.node_depth == 1).sum() == 4
+
+
+def test_random_hierarchy_exact_count():
+    for n in (100, 500):
+        pdn = random_hierarchy(n, seed=1)
+        assert pdn.n == n
+        pdn.validate()
+
+
+def test_random_hierarchy_is_oversubscribed():
+    pdn = random_hierarchy(300, seed=2)
+    assert pdn.oversubscription_ratio() > 1.05

@@ -1,0 +1,109 @@
+"""Unit + property tests for the matrix-free constraint operators."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.refsolve import dense_constraints
+from repro.core.treeops import (
+    SlaTopo,
+    TreeTopo,
+    sla_matvec,
+    sla_rmatvec,
+    tree_matvec,
+    tree_rmatvec,
+)
+from repro.pdn.tree import build_from_level_sizes
+
+
+def _topo(pdn):
+    return TreeTopo(
+        start=jnp.asarray(pdn.node_start),
+        end=jnp.asarray(pdn.node_end),
+        cap=jnp.asarray(pdn.node_cap, jnp.float32),
+        depth=jnp.asarray(pdn.node_depth),
+    )
+
+
+def test_tree_matvec_matches_dense(small_pdn):
+    tree = _topo(small_pdn)
+    n = small_pdn.n
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=n).astype(np.float32)
+    got = np.asarray(tree_matvec(jnp.asarray(x), tree))
+    K, _, _ = dense_constraints(tree, SlaTopo.empty(jnp.float32), n)
+    want = K[:, :n] @ x
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_tree_adjoint(small_pdn):
+    """<Kx, y> == <x, K^T y> for the tree block."""
+    tree = _topo(small_pdn)
+    n, m = small_pdn.n, small_pdn.m
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=n), jnp.float32)
+    y = jnp.asarray(rng.normal(size=m), jnp.float32)
+    lhs = float(jnp.vdot(tree_matvec(x, tree), y))
+    rhs = float(jnp.vdot(x, tree_rmatvec(y, tree, n)))
+    assert abs(lhs - rhs) < 1e-3 * (1 + abs(lhs))
+
+
+def test_sla_adjoint():
+    rng = np.random.default_rng(2)
+    n, k, nnz = 20, 3, 12
+    dev = jnp.asarray(rng.integers(0, n, nnz), jnp.int32)
+    ten = jnp.asarray(rng.integers(0, k, nnz), jnp.int32)
+    sla = SlaTopo(dev=dev, ten=ten, lo=jnp.zeros(k), hi=jnp.ones(k))
+    x = jnp.asarray(rng.normal(size=n), jnp.float32)
+    y = jnp.asarray(rng.normal(size=k), jnp.float32)
+    lhs = float(jnp.vdot(sla_matvec(x, sla), y))
+    rhs = float(jnp.vdot(x, sla_rmatvec(y, sla, n)))
+    assert abs(lhs - rhs) < 1e-4 * (1 + abs(lhs))
+
+
+def test_sla_matvec_segment_sums():
+    sla = SlaTopo(
+        dev=jnp.asarray([0, 1, 4], jnp.int32),
+        ten=jnp.asarray([0, 0, 1], jnp.int32),
+        lo=jnp.zeros(2),
+        hi=jnp.ones(2),
+    )
+    x = jnp.arange(6.0)
+    got = np.asarray(sla_matvec(x, sla))
+    np.testing.assert_allclose(got, [0.0 + 1.0, 4.0])
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    sizes=st.lists(st.integers(2, 4), min_size=1, max_size=3),
+    seed=st.integers(0, 10_000),
+)
+def test_tree_matvec_property(sizes, seed):
+    """Subtree sums computed by cumsum-diff equal brute-force sums for
+    arbitrary uniform trees."""
+    pdn = build_from_level_sizes(sizes, gpus_per_server=3)
+    tree = _topo(pdn)
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(0, 10, pdn.n)
+    got = np.asarray(tree_matvec(jnp.asarray(x, jnp.float32), tree))
+    for j in range(pdn.m):
+        want = x[pdn.node_start[j] : pdn.node_end[j]].sum()
+        assert abs(got[j] - want) < 1e-3 * (1 + abs(want))
+
+
+def test_root_covers_everything(small_pdn):
+    assert small_pdn.node_start[0] == 0
+    assert small_pdn.node_end[0] == small_pdn.n
+
+
+def test_validate_rejects_malformed(small_pdn):
+    import dataclasses
+
+    bad = dataclasses.replace(small_pdn, node_cap=small_pdn.node_cap * 0.0)
+    with pytest.raises(ValueError, match="infeasible PDN"):
+        bad.validate()
