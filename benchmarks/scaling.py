@@ -18,6 +18,31 @@ from repro.pdn.hierarchy_gen import random_hierarchy
 from repro.pdn.telemetry import TelemetrySim, TraceConfig
 
 
+def run_batched(n: int = 512, ks=(1, 4, 16, 64), repeats: int = 3):
+    """Batched-solve throughput scaling over scenario count K at fixed fleet
+    size: one vmapped program evaluating K what-if futures per control step
+    (beyond-paper; the sequential-loop baseline is K repeated optimize()s)."""
+    from repro.core.batched import optimize_batched
+
+    pdn = random_hierarchy(int(n), seed=3)
+    rng = np.random.default_rng(4)
+    rows = []
+    for K in ks:
+        reqs = rng.uniform(100, 650, (K, pdn.n))
+        aps = [AllocProblem.build(pdn, r) for r in reqs]
+        optimize_batched(aps)  # compile
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            optimize_batched(aps)
+            times.append(time.perf_counter() - t0)
+        mean_s = float(np.mean(times))
+        rows.append(
+            {"K": int(K), "mean_s": mean_s, "solves_per_s": K / mean_s}
+        )
+    return {"n": int(n), "rows": rows}
+
+
 def run(sizes=(1_000, 5_000, 10_000, 25_000, 50_000, 100_000), repeats=3):
     rows = []
     for n in sizes:
@@ -46,4 +71,6 @@ def run(sizes=(1_000, 5_000, 10_000, 25_000, 50_000, 100_000), repeats=3):
 if __name__ == "__main__":
     import json
 
-    print(json.dumps(run(), indent=1))
+    out = run()
+    out["batched_scaling"] = run_batched()
+    print(json.dumps(out, indent=1))

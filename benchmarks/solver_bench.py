@@ -1,5 +1,6 @@
 """Solver-internals microbench (§Perf evidence): per-phase iterations and
-wall time, warm vs cold starts, waterfill fast-path vs iterated LP."""
+wall time, warm vs cold starts, waterfill fast-path vs iterated LP, and
+batched (vmap-over-scenarios) vs sequential throughput."""
 
 from __future__ import annotations
 
@@ -7,10 +8,51 @@ import time
 
 import numpy as np
 
+from repro.core.batched import optimize_batched
 from repro.core.nvpax import NvpaxOptions, optimize
 from repro.core.problem import AllocProblem
 from repro.pdn.telemetry import TelemetrySim, TraceConfig
 from repro.pdn.tree import build_datacenter
+
+
+def bench_batched(K: int = 16, level_sizes=(2, 4, 4), gpus: int = 8) -> dict:
+    """Batched engine (one vmapped program) vs a sequential optimize() loop
+    over the same K scenarios — the MPC / what-if sweep workload."""
+    from repro.pdn.tree import build_from_level_sizes
+
+    pdn = build_from_level_sizes(list(level_sizes), gpus_per_server=gpus)
+    rng = np.random.default_rng(7)
+    reqs = rng.uniform(100, 650, (K, pdn.n))
+    aps = [AllocProblem.build(pdn, r) for r in reqs]
+
+    # compile both paths first (one-time cost, amortized per control step)
+    optimize(aps[0])
+    optimize_batched(aps)
+
+    t0 = time.perf_counter()
+    seq = [optimize(ap) for ap in aps]
+    seq_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    res_b = optimize_batched(aps)
+    bat_s = time.perf_counter() - t0
+
+    max_dev = float(
+        max(
+            np.abs(seq[k].allocation - res_b.allocation[k]).max()
+            for k in range(K)
+        )
+    )
+    return {
+        "K": K,
+        "n_devices": pdn.n,
+        "sequential_s": seq_s,
+        "batched_s": bat_s,
+        "sequential_solves_per_s": K / seq_s,
+        "batched_solves_per_s": K / bat_s,
+        "batched_speedup": seq_s / bat_s,
+        "batched_seq_max_dev_W": max_dev,
+    }
 
 
 def run(steps: int = 5) -> dict:
@@ -60,6 +102,7 @@ def run(steps: int = 5) -> dict:
         "maxmin_waterfill_ms": wf_ms,
         "waterfill_speedup": lp_ms / wf_ms,
         "waterfill_lp_max_dev_W": agree,
+        "batched": bench_batched(),
     }
 
 

@@ -1,0 +1,43 @@
+"""Version-portability shims for JAX API drift.
+
+The repo targets a range of JAX versions; APIs that moved between releases
+are funneled through this module so call sites stay stable.
+
+* ``enable_x64``: the context manager lived at ``jax.enable_x64`` in older
+  releases and moved to ``jax.experimental.enable_x64``.  Newer releases
+  also accept per-context configuration via ``jax.config``; the shim always
+  returns a context manager with the historical semantics
+  (``enable_x64(flag)`` enables/disables 64-bit types inside the block).
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+__all__ = ["enable_x64"]
+
+
+def enable_x64(enabled: bool = True):
+    """Context manager enabling (or disabling) 64-bit types within the block.
+
+    Resolution order: ``jax.experimental.enable_x64`` (current releases),
+    then the legacy ``jax.enable_x64``, then a ``jax.config`` update shim.
+    """
+    exp = getattr(jax, "experimental", None)
+    if exp is not None and hasattr(exp, "enable_x64"):
+        return exp.enable_x64(enabled)
+    if hasattr(jax, "enable_x64"):
+        return jax.enable_x64(enabled)
+
+    @contextlib.contextmanager
+    def _shim():
+        prev = jax.config.jax_enable_x64
+        jax.config.update("jax_enable_x64", enabled)
+        try:
+            yield
+        finally:
+            jax.config.update("jax_enable_x64", prev)
+
+    return _shim()

@@ -1,5 +1,10 @@
 """nvPAX core: the paper's contribution as a composable JAX module."""
 
+from repro.core.batched import (
+    BatchedAllocResult,
+    optimize_batched,
+    stack_problems,
+)
 from repro.core.greedy import greedy_allocate, static_allocate
 from repro.core.metrics import (
     relative_improvement,
@@ -17,6 +22,7 @@ from repro.core.waterfill import waterfill
 __all__ = [
     "AllocProblem",
     "AllocResult",
+    "BatchedAllocResult",
     "NvpaxOptions",
     "SlaTopo",
     "SolverOptions",
@@ -25,6 +31,8 @@ __all__ = [
     "TreeTopo",
     "greedy_allocate",
     "optimize",
+    "optimize_batched",
+    "stack_problems",
     "relative_improvement",
     "satisfaction_ratio",
     "sla_margin",

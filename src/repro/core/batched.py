@@ -1,0 +1,405 @@
+"""Fully-jitted batched three-phase allocation engine (Algorithm 3 under
+``jax.vmap``).
+
+The host drivers in :mod:`repro.core.phases` orchestrate the three nvPAX
+phases with Python control flow — a priority sweep with host-side level
+enumeration, saturation rounds with ``np.asarray(...).any()`` early exits,
+and a host water-filling fast path.  That is the right shape for the
+closed-loop controller (one problem per 30 s interval, per-phase wall-clock
+stats, deadline truncation), but it serializes MPC what-if sweeps,
+per-tenant scenario evaluation, and robustness studies, which need *many*
+solves per control step.
+
+This module re-expresses the same algorithm as a fixed-shape jax program:
+
+* the Phase I priority sweep is a ``lax.scan`` over the problem's
+  precomputed priority-level metadata (``AllocProblem.priority_levels``),
+  with per-scenario empty levels skipped by ``lax.cond`` so sweep semantics
+  match the host driver exactly;
+* the Phase II/III saturation rounds are a ``lax.while_loop`` over a
+  :class:`BatchedStepState`, with the host driver's two exit tests (empty
+  optimized set; no measurable head-room and nothing newly saturated)
+  evaluated as traced predicates;
+* the exact feasibility repair is the shared fixed-trip
+  ``phases.repair(..., n_depths)`` fori-loop;
+* the SLA-free max-min fast path is the trace-safe water-filling sweep
+  :func:`repro.core.waterfill.waterfill_jax`.
+
+Because every step-problem builder (``qp_step``, ``lp_step``,
+``saturated_mask``, ``repair``) is imported from :mod:`repro.core.phases`,
+the host and jitted paths cannot drift: they build bit-identical convex
+programs and differ only in orchestration.
+
+The whole three-phase policy therefore compiles once per
+``(n, m, k, n_priority_levels)`` shape and is ``vmap``-ed over K request
+scenarios into one accelerator program — :func:`optimize_batched` is the
+public entry point.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+import time
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.compat import enable_x64
+from repro.core import pdhg, phases
+from repro.core.nvpax import NvpaxOptions
+from repro.core.problem import AllocProblem
+from repro.core.waterfill import waterfill_jax
+
+__all__ = [
+    "BatchMeta",
+    "BatchedStepState",
+    "BatchedAllocResult",
+    "stack_problems",
+    "solve_three_phase",
+    "optimize_batched",
+]
+
+
+class BatchMeta(NamedTuple):
+    """Static (hashable) metadata parameterizing one engine compilation.
+
+    Derived from the problem by :func:`batch_meta`; the engine jits once per
+    distinct value (plus the ``(n, m, k)`` array shapes).
+    """
+
+    levels: tuple[int, ...]  # descending distinct priority values
+    n_depths: int  # PDN tree depth count (repair fori-loop trips)
+    pin_free: bool  # Phase I free-device pinning (paper 4.3.1)
+    max_rounds: int  # Phase II/III saturation-round bound
+    use_waterfill: bool  # SLA-free max-min fast path
+    run_phase2: bool
+    run_phase3: bool
+    eps: float  # regularization weight
+
+
+class BatchedStepState(NamedTuple):
+    """Carry of the masked scan/while programs (one scenario's solve)."""
+
+    x: jnp.ndarray  # [n] current allocation
+    solver: pdhg.SolverState  # warm-started inner-solver state
+    mask: jnp.ndarray  # [n] bool: finalized set (P1) / optimized set (P2, P3)
+    solves: jnp.ndarray  # int32: inner solves actually executed
+    iterations: jnp.ndarray  # int32: cumulative PDHG iterations
+    converged: jnp.ndarray  # bool: all executed solves converged
+    done: jnp.ndarray  # bool: early-exit flag (max-min rounds)
+
+
+@dataclass
+class BatchedAllocResult:
+    """K scenarios' worth of :class:`repro.core.nvpax.AllocResult`."""
+
+    allocation: np.ndarray  # [K, n] final feasible allocations
+    phase1: np.ndarray  # [K, n]
+    phase2: np.ndarray  # [K, n]
+    warm_state: Any  # batched pdhg.SolverState ([K, ...] leaves)
+    wall_time_s: float
+    stats: dict[str, Any]  # per-scenario arrays: solves/iterations/converged
+
+
+def batch_meta(ap: AllocProblem, options: NvpaxOptions) -> BatchMeta:
+    """Static engine metadata from a (possibly stacked) problem."""
+    return BatchMeta(
+        levels=ap.priority_levels(active_only=True),
+        n_depths=ap.n_tree_depths(),
+        pin_free=ap.pin_free_ok(),
+        max_rounds=options.max_rounds,
+        use_waterfill=options.use_waterfill,
+        run_phase2=options.run_phase2,
+        run_phase3=options.run_phase3,
+        eps=options.eps,
+    )
+
+
+def stack_problems(aps: Sequence[AllocProblem]) -> AllocProblem:
+    """Stack K control-step problems into one with ``[K, n]`` fleet leaves.
+
+    All scenarios must share the PDN and SLA topology (same datacenter,
+    different telemetry/activity/priorities) — that is what makes the
+    batched solve one fixed-shape program.  Raises ``ValueError`` on
+    topology mismatch.
+    """
+    if not aps:
+        raise ValueError("need at least one AllocProblem")
+    ref = aps[0]
+    for i, ap in enumerate(aps[1:], start=1):
+        for name, a, b in [
+            ("tree.start", ref.tree.start, ap.tree.start),
+            ("tree.end", ref.tree.end, ap.tree.end),
+            ("tree.cap", ref.tree.cap, ap.tree.cap),
+            ("tree.depth", ref.tree.depth, ap.tree.depth),
+            ("sla.dev", ref.sla.dev, ap.sla.dev),
+            ("sla.ten", ref.sla.ten, ap.sla.ten),
+            ("sla.lo", ref.sla.lo, ap.sla.lo),
+            ("sla.hi", ref.sla.hi, ap.sla.hi),
+        ]:
+            if a is b:  # shared topology object (controller path): no D2H compare
+                continue
+            if a.shape != b.shape or not bool(np.array_equal(np.asarray(a), np.asarray(b))):
+                raise ValueError(f"scenario {i} differs from scenario 0 in {name}")
+    stk = lambda leaf: jnp.stack([getattr(ap, leaf) for ap in aps])
+    return ref._replace(
+        l=stk("l"),
+        u=stk("u"),
+        r=stk("r"),
+        priority=stk("priority"),
+        active=stk("active"),
+        weight_scale=stk("weight_scale"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# single-scenario trace-safe engine
+# ---------------------------------------------------------------------------
+
+
+def _phase1_scan(
+    ap: AllocProblem,
+    meta: BatchMeta,
+    opts: pdhg.SolverOptions,
+    warm: pdhg.SolverState,
+) -> BatchedStepState:
+    """Algorithm 1 as a ``lax.scan`` over the static priority levels."""
+    n = ap.n
+    init = BatchedStepState(
+        x=ap.l,
+        solver=warm,
+        mask=jnp.zeros((n,), bool),
+        solves=jnp.zeros((), jnp.int32),
+        iterations=jnp.zeros((), jnp.int32),
+        converged=jnp.asarray(True),
+        done=jnp.asarray(False),
+    )
+    if not meta.levels:
+        return init
+
+    def level_step(st: BatchedStepState, p):
+        mask_a = ap.active & (ap.priority == p)
+
+        def run(st: BatchedStepState) -> BatchedStepState:
+            prob = phases.qp_step(
+                ap, st.x, mask_a, st.mask, meta.eps, pin_free=meta.pin_free
+            )
+            solver = pdhg.SolverState(
+                st.x, st.solver.t, st.solver.y_tree, st.solver.y_sla, st.solver.y_imp
+            )
+            solver, stats = pdhg.solve(prob, ap.tree, ap.sla, solver, opts)
+            x = phases.repair(solver.x, ap, meta.n_depths)
+            return BatchedStepState(
+                x=x,
+                solver=solver,
+                mask=st.mask | mask_a,
+                solves=st.solves + 1,
+                iterations=st.iterations + stats.iterations.astype(jnp.int32),
+                converged=st.converged & stats.converged,
+                done=st.done,
+            )
+
+        # the host driver only sweeps levels present among this scenario's
+        # active devices; skip empty levels to match it exactly
+        st = lax.cond(jnp.any(mask_a), run, lambda s: s, st)
+        return st, None
+
+    levels = jnp.asarray(meta.levels, ap.priority.dtype)
+    final, _ = lax.scan(level_step, init, levels)
+    return final
+
+
+def _maxmin_loop(
+    ap: AllocProblem,
+    x: jnp.ndarray,
+    opt_set: jnp.ndarray,
+    free_set: jnp.ndarray,
+    meta: BatchMeta,
+    opts: pdhg.SolverOptions,
+    warm: pdhg.SolverState,
+) -> BatchedStepState:
+    """Algorithm 2 as a ``lax.while_loop`` (Phase II/III shared driver)."""
+    dtype = ap.l.dtype
+    if meta.use_waterfill and ap.sla.k == 0:
+        x_wf = waterfill_jax(x, opt_set, ap.tree, ap.u)
+        return BatchedStepState(
+            x=x_wf,
+            solver=warm,
+            mask=jnp.zeros_like(opt_set),
+            solves=jnp.zeros((), jnp.int32),
+            iterations=jnp.zeros((), jnp.int32),
+            converged=jnp.asarray(True),
+            done=jnp.asarray(True),
+        )
+
+    # freeze devices with no slack at entry (see phases.run_maxmin_phase)
+    mask0 = opt_set & ~phases.saturated_mask(x, ap, opt_set)
+    init = BatchedStepState(
+        x=x,
+        solver=warm,
+        mask=mask0,
+        solves=jnp.zeros((), jnp.int32),
+        iterations=jnp.zeros((), jnp.int32),
+        converged=jnp.asarray(True),
+        done=jnp.asarray(False),
+    )
+
+    def cond(st: BatchedStepState):
+        return (~st.done) & (st.solves < meta.max_rounds) & jnp.any(st.mask)
+
+    def body(st: BatchedStepState) -> BatchedStepState:
+        mask_f = ~(st.mask | free_set)
+        prob = phases.lp_step(ap, st.x, st.mask, mask_f, free_set, meta.eps)
+        solver = pdhg.SolverState(
+            st.x,
+            jnp.zeros((), dtype),
+            st.solver.y_tree,
+            st.solver.y_sla,
+            st.solver.y_imp,
+        )
+        solver, stats = pdhg.solve(prob, ap.tree, ap.sla, solver, opts)
+        x_new = phases.repair(solver.x, ap, meta.n_depths)
+        sat = phases.saturated_mask(x_new, ap, st.mask)
+        # host driver: stop when no measurable head-room is left AND nothing
+        # newly saturated needs freezing
+        done = (solver.t <= phases.SAT_TOL) & ~jnp.any(sat)
+        return BatchedStepState(
+            x=x_new,
+            solver=solver,
+            mask=st.mask & ~sat,
+            solves=st.solves + 1,
+            iterations=st.iterations + stats.iterations.astype(jnp.int32),
+            converged=st.converged & stats.converged,
+            done=done,
+        )
+
+    return lax.while_loop(cond, body, init)
+
+
+def solve_three_phase(
+    ap: AllocProblem,
+    meta: BatchMeta,
+    opts: pdhg.SolverOptions,
+    warm: pdhg.SolverState | None = None,
+):
+    """One scenario's full Algorithm 3, trace-safe (jit/vmap-able).
+
+    Returns ``(x1, x2, x3, solver_state, stats_dict)`` with jnp leaves.
+    """
+    n, m, k = ap.n, ap.tree.m, ap.sla.k
+    dtype = ap.l.dtype
+    solver = warm if warm is not None else pdhg.SolverState.zeros(n, m, k, dtype)
+
+    p1 = _phase1_scan(ap, meta, opts, solver)
+    x1, solver = p1.x, p1.solver
+
+    if meta.run_phase2:
+        p2 = _maxmin_loop(ap, x1, ap.active, ap.idle, meta, opts, solver)
+        x2, solver = p2.x, p2.solver
+    else:
+        p2 = p1._replace(solves=jnp.zeros((), jnp.int32),
+                         iterations=jnp.zeros((), jnp.int32),
+                         converged=jnp.asarray(True))
+        x2 = x1
+
+    if meta.run_phase3:
+        empty = jnp.zeros_like(ap.active)
+        p3 = _maxmin_loop(ap, x2, ap.idle, empty, meta, opts, solver)
+        x3, solver = p3.x, p3.solver
+    else:
+        p3 = p2._replace(solves=jnp.zeros((), jnp.int32),
+                         iterations=jnp.zeros((), jnp.int32),
+                         converged=jnp.asarray(True))
+        x3 = x2
+
+    stats = {
+        "solves": p1.solves + p2.solves + p3.solves,
+        "iterations": p1.iterations + p2.iterations + p3.iterations,
+        "converged": p1.converged & p2.converged & p3.converged,
+    }
+    return x1, x2, x3, solver, stats
+
+
+@functools.partial(jax.jit, static_argnames=("meta", "opts"))
+def _solve_batched(
+    stacked: AllocProblem,
+    meta: BatchMeta,
+    opts: pdhg.SolverOptions,
+    warm: pdhg.SolverState | None,
+):
+    """vmap of the three-phase engine over the leading scenario axis."""
+    tree, sla = stacked.tree, stacked.sla
+
+    def one(l, u, r, priority, active, weight_scale, warm_one):
+        ap = AllocProblem(
+            l=l, u=u, r=r, priority=priority, active=active,
+            tree=tree, sla=sla, weight_scale=weight_scale,
+        )
+        return solve_three_phase(ap, meta, opts, warm_one)
+
+    warm_axes = None if warm is None else pdhg.SolverState(0, 0, 0, 0, 0)
+    return jax.vmap(one, in_axes=(0, 0, 0, 0, 0, 0, warm_axes))(
+        stacked.l,
+        stacked.u,
+        stacked.r,
+        stacked.priority,
+        stacked.active,
+        stacked.weight_scale,
+        warm,
+    )
+
+
+# ---------------------------------------------------------------------------
+# public entry point
+# ---------------------------------------------------------------------------
+
+
+def optimize_batched(
+    aps: Sequence[AllocProblem] | AllocProblem,
+    options: NvpaxOptions = NvpaxOptions(),
+    warm: pdhg.SolverState | None = None,
+) -> BatchedAllocResult:
+    """Run Algorithm 3 on K scenarios as ONE jitted+vmapped program.
+
+    ``aps`` is either a sequence of per-scenario :class:`AllocProblem`\\ s
+    sharing PDN/SLA topology, or an already-stacked problem with ``[K, n]``
+    fleet leaves (see :func:`stack_problems`).  ``warm`` optionally carries
+    a batched solver state from a previous batched call (``[K, ...]``
+    leaves).  ``options.deadline_s`` is ignored: the batched engine is a
+    single accelerator program with no phase-boundary host hops.
+
+    Output matches per-scenario :func:`repro.core.nvpax.optimize` to solver
+    tolerance (asserted in ``tests/test_batched.py``).
+    """
+    ctx = enable_x64(True) if options.x64 else contextlib.nullcontext()
+    t0 = time.perf_counter()
+    with ctx:  # stack + solve under one x64 context (no silent f32 downcast)
+        stacked = aps if isinstance(aps, AllocProblem) else stack_problems(aps)
+        if stacked.l.ndim != 2:
+            raise ValueError(
+                f"expected stacked [K, n] fleet leaves, got shape {stacked.l.shape}"
+            )
+        meta = batch_meta(stacked, options)
+        x1, x2, x3, solver, stats = _solve_batched(
+            stacked, meta, options.solver, warm
+        )
+        x3 = x3.block_until_ready()
+    wall = time.perf_counter() - t0
+    return BatchedAllocResult(
+        allocation=np.asarray(x3),
+        phase1=np.asarray(x1),
+        phase2=np.asarray(x2),
+        warm_state=solver,
+        wall_time_s=wall,
+        stats={
+            "solves": np.asarray(stats["solves"]),
+            "iterations": np.asarray(stats["iterations"]),
+            "converged": np.asarray(stats["converged"]),
+            "n_scenarios": int(stacked.l.shape[0]),
+        },
+    )

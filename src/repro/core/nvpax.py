@@ -10,14 +10,15 @@ implement it, see EXPERIMENTS.md §Perf).
 
 from __future__ import annotations
 
+import contextlib
 import time
 from dataclasses import dataclass, field
 from typing import Any
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import enable_x64
 from repro.core import pdhg, phases
 from repro.core.problem import AllocProblem
 
@@ -31,7 +32,7 @@ class NvpaxOptions:
     run_phase2: bool = True
     run_phase3: bool = True
     max_rounds: int = phases.MAX_ROUNDS
-    x64: bool = True  # solve in float64 (jax.enable_x64 context)
+    x64: bool = True  # solve in float64 (repro.compat.enable_x64 context)
     # exact water-filling fast path for the max-min phases on SLA-free
     # problems (beyond-paper optimization; equals the iterated-LP limit)
     use_waterfill: bool = True
@@ -61,7 +62,7 @@ def optimize(
     warm: pdhg.SolverState | None = None,
 ) -> AllocResult:
     """Run Algorithm 3 on one control step's problem."""
-    ctx = jax.enable_x64(True) if options.x64 else _nullcontext()
+    ctx = enable_x64(True) if options.x64 else contextlib.nullcontext()
     t0 = time.perf_counter()
 
     def in_budget() -> bool:
@@ -110,11 +111,3 @@ def optimize(
             "truncated": truncated,
         },
     )
-
-
-class _nullcontext:
-    def __enter__(self):
-        return self
-
-    def __exit__(self, *a):
-        return False

@@ -13,6 +13,7 @@ from typing import NamedTuple
 
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from repro.core import pdhg
 from repro.core.problem import INF, AllocProblem, StepProblem
@@ -46,7 +47,9 @@ class PhaseStats(NamedTuple):
 # ---------------------------------------------------------------------------
 
 
-def repair(x: jnp.ndarray, ap: AllocProblem) -> jnp.ndarray:
+def repair(
+    x: jnp.ndarray, ap: AllocProblem, n_depths: int | None = None
+) -> jnp.ndarray:
     """Project solver output onto exact feasibility for box + tenant-max +
     tree constraints by monotone scale-downs toward ``l``.
 
@@ -56,7 +59,14 @@ def repair(x: jnp.ndarray, ap: AllocProblem) -> jnp.ndarray:
     processing tree levels top-down cannot re-violate an ancestor.  Tenant
     *minimums* can in principle lose up to the solver tolerance; tests bound
     this below 1e-6 W.
+
+    Trace-safe: the per-depth sweep is a fixed-trip ``lax.fori_loop``, so
+    the same code serves the host drivers and the fully-jitted batched
+    engine.  ``n_depths`` (static) must be supplied when ``ap`` holds
+    tracers; it defaults to ``ap.n_tree_depths()`` on concrete problems.
     """
+    if n_depths is None:
+        n_depths = ap.n_tree_depths()
     l = ap.l
     # -- tenant upper bounds --
     if ap.sla.k > 0:
@@ -70,11 +80,12 @@ def repair(x: jnp.ndarray, ap: AllocProblem) -> jnp.ndarray:
         fac_dev = jnp.ones_like(x).at[ap.sla.dev].min(fac_t[ap.sla.ten])
         x = l + (x - l) * fac_dev
     # -- tree caps, one level at a time (ranges at equal depth are disjoint) --
-    depths = np.asarray(ap.tree.depth)
+    depths = ap.tree.depth
     lcs = jnp.concatenate([jnp.zeros((1,), x.dtype), jnp.cumsum(l)])
     lmin_node = lcs[ap.tree.end] - lcs[ap.tree.start]
-    for d in range(int(depths.max()) + 1):
-        level = jnp.asarray(depths == d)
+
+    def scale_level(d, x):
+        level = depths == d
         sums = tree_matvec(x, ap.tree)
         over = level & (sums > ap.tree.cap)
         denom = jnp.maximum(sums - lmin_node, 1e-30)
@@ -84,7 +95,9 @@ def repair(x: jnp.ndarray, ap: AllocProblem) -> jnp.ndarray:
         diff = diff.at[ap.tree.start].add(fac_node - 1.0)
         diff = diff.at[ap.tree.end].add(-(fac_node - 1.0))
         fac_dev = 1.0 + jnp.cumsum(diff)[: x.shape[0]]
-        x = l + (x - l) * fac_dev
+        return l + (x - l) * fac_dev
+
+    x = lax.fori_loop(0, n_depths, scale_level, x)
     return jnp.clip(x, ap.l, ap.u)
 
 
@@ -217,17 +230,13 @@ def phase1(
     state = warm if warm is not None else pdhg.SolverState.zeros(n, m, k, dtype)
     x = ap.l
     finalized = jnp.zeros((n,), bool)
-    act_np = np.asarray(ap.active)
-    levels = (
-        sorted({int(p) for p in np.asarray(ap.priority)[act_np]}, reverse=True)
-        if act_np.any()
-        else []
-    )
-    # Free devices can be pinned at l when no tenant lower bound could force
-    # them upward (paper 4.3.1).  Checked once per control step, host-side.
-    pin_free = ap.sla.k == 0 or not bool(
-        np.asarray(jnp.any(ap.sla.lo > 0)).item()
-    )
+    # Sweep order and the pin-free simplification (paper 4.3.1) come from the
+    # problem's precomputed level metadata — the same metadata that
+    # parameterizes the fully-jitted engine in repro.core.batched, so the
+    # host and jitted paths cannot drift.
+    levels = ap.priority_levels(active_only=True)
+    pin_free = ap.pin_free_ok()
+    n_depths = ap.n_tree_depths()
     solves = iters = 0
     conv = True
     maxres = 0.0
@@ -236,7 +245,7 @@ def phase1(
         prob = qp_step(ap, x, mask_a, finalized, eps, pin_free=pin_free)
         state = pdhg.SolverState(x, state.t, state.y_tree, state.y_sla, state.y_imp)
         state, stats = pdhg.solve(prob, ap.tree, ap.sla, state, opts)
-        x = repair(state.x, ap)
+        x = repair(state.x, ap, n_depths)
         finalized = finalized | mask_a
         solves += 1
         iters += int(stats.iterations)
@@ -290,6 +299,7 @@ def run_maxmin_phase(
     # otherwise they force t* = 0 and the eps-term would distribute surplus
     # arbitrarily instead of max-min fairly.
     mask_a = opt_set & ~saturated_mask(x, ap, opt_set)
+    n_depths = ap.n_tree_depths()
     solves = iters = 0
     conv = True
     maxres = 0.0
@@ -300,7 +310,7 @@ def run_maxmin_phase(
         prob = lp_step(ap, x, mask_a, mask_f, free_set, eps)
         state = pdhg.SolverState(x, jnp.zeros((), dtype), state.y_tree, state.y_sla, state.y_imp)
         state, stats = pdhg.solve(prob, ap.tree, ap.sla, state, opts)
-        x_new = repair(state.x, ap)
+        x_new = repair(state.x, ap, n_depths)
         solves += 1
         iters += int(stats.iterations)
         conv &= bool(stats.converged)

@@ -58,6 +58,37 @@ class AllocProblem(NamedTuple):
     def idle(self) -> jnp.ndarray:
         return ~self.active
 
+    # -- precomputed level metadata (host-side; requires concrete arrays) --
+    #
+    # These drive the fixed-trip jax control flow shared by the host drivers
+    # in :mod:`repro.core.phases` and the fully-jitted engine in
+    # :mod:`repro.core.batched`: the priority sweep scans over
+    # ``priority_levels()`` and the feasibility repair runs
+    # ``n_tree_depths()`` fori-loop trips.
+
+    def priority_levels(self, active_only: bool = True) -> tuple[int, ...]:
+        """Distinct priority values, descending (Algorithm 1 sweep order).
+
+        ``active_only`` restricts to levels present among active devices —
+        the host driver's behavior.  Must be called on concrete (untraced)
+        arrays; the result is static metadata for jitted programs.
+        """
+        pri = np.asarray(self.priority)
+        if active_only:
+            pri = pri[np.asarray(self.active)]
+        return tuple(sorted({int(p) for p in pri}, reverse=True))
+
+    def n_tree_depths(self) -> int:
+        """Number of distinct PDN tree levels (root depth 0 included)."""
+        depth = np.asarray(self.tree.depth)
+        return int(depth.max()) + 1 if depth.size else 0
+
+    def pin_free_ok(self) -> bool:
+        """True when free devices can be pinned at ``l`` in Phase I: no
+        tenant lower-bound SLA could force an idle device upward (paper
+        section 4.3.1)."""
+        return self.sla.k == 0 or not bool((np.asarray(self.sla.lo) > 0).any())
+
     @classmethod
     def build(
         cls,
@@ -95,9 +126,11 @@ class AllocProblem(NamedTuple):
         weight_scale = (1.0 / pdn.dev_u) if normalized else np.ones((n,))
         # f64 conversion must happen under an x64 context or jax silently
         # truncates to f32.
-        import jax  # local import to keep module import light
+        import contextlib
 
-        ctx = jax.enable_x64(True) if dtype == jnp.float64 else _null()
+        from repro.compat import enable_x64  # local import keeps import light
+
+        ctx = enable_x64(True) if dtype == jnp.float64 else contextlib.nullcontext()
         with ctx:
             if sla is None:
                 sla = SlaTopo.empty(dtype)
@@ -125,14 +158,6 @@ class AllocProblem(NamedTuple):
             ),
             weight_scale=jnp.asarray(weight_scale, dtype),
         )
-
-
-class _null:
-    def __enter__(self):
-        return self
-
-    def __exit__(self, *a):
-        return False
 
 
 class StepProblem(NamedTuple):

@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.pdn.tree import FlatPDN
 
-__all__ = ["waterfill", "waterfill_arrays"]
+__all__ = ["waterfill", "waterfill_arrays", "waterfill_jax"]
 
 
 def waterfill_arrays(
@@ -73,6 +73,56 @@ def waterfill_arrays(
         if not newly.any():
             break  # unbounded direction fully absorbed (all at u) or stalled
         live &= ~newly
+    return x
+
+
+def waterfill_jax(base, opt_mask, tree, u, max_rounds: int = 10_000):
+    """Trace-safe :func:`waterfill_arrays`: the progressive-filling sweep as
+    a ``lax.while_loop``, usable inside jit/vmap (the batched engine's
+    max-min fast path on SLA-free problems).
+
+    ``tree`` is a :class:`repro.core.treeops.TreeTopo`; semantics and
+    freezing order mirror the numpy sweep exactly (cross-validated in
+    tests), so host and jitted paths produce the same allocation.
+    """
+    import jax.numpy as jnp
+    from jax import lax
+
+    from repro.core.treeops import tree_matvec, tree_rmatvec
+
+    n = base.shape[0]
+    x0 = jnp.asarray(base)
+    dtype = x0.dtype
+    live0 = jnp.asarray(opt_mask, bool)
+    u = jnp.asarray(u, dtype)
+
+    def cond(carry):
+        _, live, done, rounds = carry
+        return (~done) & jnp.any(live) & (rounds < max_rounds)
+
+    def body(carry):
+        x, live, _, rounds = carry
+        lv = live.astype(dtype)
+        n_live = tree_matvec(lv, tree)
+        slack = tree.cap - tree_matvec(x, tree)
+        node_rate = jnp.where(n_live > 0, slack / jnp.maximum(n_live, 1.0), jnp.inf)
+        dev_rate = jnp.where(live, u - x, jnp.inf)
+        t = jnp.maximum(jnp.minimum(jnp.min(node_rate), jnp.min(dev_rate)), 0.0)
+        finite = jnp.isfinite(t)
+        # numpy sweep breaks BEFORE applying a non-finite raise
+        x_new = jnp.where(live & finite, x + t, x)
+        # freeze: devices at u, or under any node now tight
+        tight = (tree.cap - tree_matvec(x_new, tree) <= 1e-9) & (n_live > 0)
+        under_tight = tree_rmatvec(tight.astype(dtype), tree, n) > 0.5
+        newly = live & ((u - x_new <= 1e-9) | under_tight)
+        stalled = ~jnp.any(newly)  # unbounded direction absorbed or stalled
+        done = (~finite) | stalled
+        live_new = jnp.where(finite, live & ~newly, live)
+        return x_new, live_new, done, rounds + 1
+
+    x, _, _, _ = lax.while_loop(
+        cond, body, (x0, live0, jnp.asarray(False), jnp.asarray(0, jnp.int32))
+    )
     return x
 
 

@@ -184,6 +184,9 @@ def dryrun_cell(arch: str, shape_name: str, mesh_kind: str,
         compile_s = time.time() - t0
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        # jax returned list[dict] (one per executable) before ~0.5; dict after
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         coll = collective_stats(hlo)
         walked = analyze_hlo(hlo)  # trip-count-aware per-partition cost

@@ -25,6 +25,7 @@ from typing import Any
 
 import numpy as np
 
+from repro.core.batched import optimize_batched
 from repro.core.nvpax import AllocResult, NvpaxOptions, optimize
 from repro.core.problem import AllocProblem
 from repro.core.treeops import SlaTopo
@@ -79,6 +80,31 @@ class PowerController:
         self.supply_scale = float(scale)
         self._warm = None
 
+    # -- problem construction (shared by step / step_batched) --------------
+
+    def _build_problem(
+        self, telemetry: np.ndarray, active: np.ndarray | None
+    ) -> AllocProblem:
+        cfg = self.config
+        requests = np.asarray(telemetry, dtype=np.float64) * cfg.request_margin
+        req = np.where(self.failed, 0.0, requests)
+        if active is not None:
+            active = np.asarray(active, bool) & ~self.failed
+
+        pdn_eff = self.pdn
+        if self.supply_scale != 1.0:
+            pdn_eff = _dc.replace(
+                self.pdn, node_cap=self.pdn.node_cap * self.supply_scale
+            )
+        return AllocProblem.build(
+            pdn_eff,
+            req,
+            active=active,
+            idle_threshold=cfg.idle_threshold,
+            sla=self.sla,
+            priority=self.priority,
+        )
+
     # -- main loop ---------------------------------------------------------
 
     def step(
@@ -87,32 +113,14 @@ class PowerController:
         *,
         active: np.ndarray | None = None,
     ) -> AllocResult:
-        """One control step: telemetry [n] watts -> allocation (caps)."""
+        """One control step: telemetry [n] watts -> allocation (caps).
+
+        Failed devices are forced idle with a zero-power box by shrinking
+        the request; the box itself must stay [l, u] to keep the PDN
+        feasible, so failed devices are pinned at l and reported unusable.
+        """
         cfg = self.config
-        pdn = self.pdn
-        requests = np.asarray(telemetry, dtype=np.float64) * cfg.request_margin
-
-        # failed devices: force idle with a zero-power box by shrinking the
-        # request; the box itself must stay [l, u] to keep the PDN feasible,
-        # so failed devices are pinned at l and reported as unusable.
-        req = np.where(self.failed, 0.0, requests)
-        if active is not None:
-            active = np.asarray(active, bool) & ~self.failed
-
-        pdn_eff = pdn
-        if self.supply_scale != 1.0:
-            pdn_eff = _dc.replace(
-                pdn, node_cap=pdn.node_cap * self.supply_scale
-            )
-
-        ap = AllocProblem.build(
-            pdn_eff,
-            req,
-            active=active,
-            idle_threshold=cfg.idle_threshold,
-            sla=self.sla,
-            priority=self.priority,
-        )
+        ap = self._build_problem(telemetry, active)
         t0 = time.perf_counter()
         res = optimize(ap, cfg.options, warm=self._warm)
         wall = time.perf_counter() - t0
@@ -126,3 +134,57 @@ class PowerController:
             }
         )
         return res
+
+    # -- batched what-if evaluation ----------------------------------------
+
+    def step_batched(
+        self,
+        telemetry_batch: np.ndarray,
+        *,
+        active: np.ndarray | None = None,
+    ):
+        """Evaluate K candidate telemetry scenarios in ONE compiled program.
+
+        ``telemetry_batch`` is ``[K, n]`` watts (e.g. MPC candidate futures,
+        per-tenant perturbations, robustness samples); ``active`` is either
+        ``[n]`` (shared job placement across scenarios) or ``[K, n]``.
+
+        This is a *what-if* API: it applies the same request pre-processing,
+        failure masking and supply scaling as :meth:`step` but does NOT
+        advance the controller's warm-start state or history — the caller
+        picks a scenario and then commits it with :meth:`step`.  Returns a
+        :class:`repro.core.batched.BatchedAllocResult` with ``[K, n]``
+        feasible allocations.
+        """
+        telemetry_batch = np.asarray(telemetry_batch, dtype=np.float64)
+        if telemetry_batch.ndim != 2 or telemetry_batch.shape[0] == 0:
+            raise ValueError(
+                f"telemetry_batch must be [K, n] with K >= 1, got "
+                f"{telemetry_batch.shape}"
+            )
+        K, n = telemetry_batch.shape
+        if active is not None:
+            active = np.asarray(active, bool)
+            if active.shape == (n,):
+                act_rows = [active] * K
+            elif active.shape == (K, n):
+                act_rows = [active[k] for k in range(K)]
+            else:
+                raise ValueError(
+                    f"active must be [{n}] or [{K}, {n}], got {active.shape}"
+                )
+        else:
+            act_rows = [None] * K
+        aps = [
+            self._build_problem(telemetry_batch[k], act_rows[k]) for k in range(K)
+        ]
+        # all scenarios come from the same pdn_eff/sla: share scenario 0's
+        # topology arrays so stacking skips the per-leaf equality compare
+        aps = [aps[0]] + [
+            ap._replace(tree=aps[0].tree, sla=aps[0].sla) for ap in aps[1:]
+        ]
+        return optimize_batched(aps, self.config.options)
+
+    def what_if(self, telemetry_batch: np.ndarray, **kw):
+        """Alias for :meth:`step_batched` (MPC / scenario-sweep reads)."""
+        return self.step_batched(telemetry_batch, **kw)

@@ -80,12 +80,12 @@ def pipeline_forward(mesh: Mesh, axis: str, stage_fn, n_microbatches: int):
             )
             return (nxt, outputs), None
 
-        inflight0 = jax.lax.pcast(
-            jnp.zeros(mb_shape, batch.dtype), (axis,), to="varying"
-        )
-        outputs0 = jax.lax.pcast(
-            jnp.zeros((M,) + mb_shape, batch.dtype), (axis,), to="varying"
-        )
+        # The scan carry becomes per-stage ("varying") data after the first
+        # ppermute; zeros inits are fine because replication checking is
+        # disabled on the shard_map below (jax.lax.pcast/pvary are not
+        # available on all supported jax versions).
+        inflight0 = jnp.zeros(mb_shape, batch.dtype)
+        outputs0 = jnp.zeros((M,) + mb_shape, batch.dtype)
         (_, outputs), _ = jax.lax.scan(
             tick, (inflight0, outputs0), jnp.arange(ticks)
         )
@@ -102,6 +102,7 @@ def pipeline_forward(mesh: Mesh, axis: str, stage_fn, n_microbatches: int):
             mesh=mesh,
             in_specs=(in_specs_params, P()),
             out_specs=P(),
+            check_rep=False,
         )
         return g(stacked_stage_params, batch)
 

@@ -9,6 +9,8 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from repro.compat import enable_x64
+
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.pdhg_update import dual_prox, primal_update
@@ -26,7 +28,7 @@ from repro.pdn.tree import build_from_level_sizes
 @pytest.mark.parametrize("n", [7, 128, 8192, 20000])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
 def test_primal_update_sweep(n, dtype):
-    with jax.enable_x64(dtype == jnp.float64):
+    with enable_x64(dtype == jnp.float64):
         rng = np.random.default_rng(n)
         mk = lambda: jnp.asarray(rng.normal(size=n), dtype)
         x, gx, c, w = mk(), mk(), mk(), jnp.abs(mk())
@@ -43,7 +45,7 @@ def test_primal_update_sweep(n, dtype):
 @pytest.mark.parametrize("n", [5, 1024, 9000])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
 def test_dual_prox_sweep(n, dtype):
-    with jax.enable_x64(dtype == jnp.float64):
+    with enable_x64(dtype == jnp.float64):
         rng = np.random.default_rng(n + 1)
         mk = lambda: jnp.asarray(rng.normal(size=n), dtype)
         y, a = mk(), mk()
@@ -63,7 +65,7 @@ def test_dual_prox_sweep(n, dtype):
 @pytest.mark.parametrize("sizes", [[2, 2], [3, 2, 2], [4, 4]])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
 def test_tree_matvec_sweep(sizes, dtype):
-    with jax.enable_x64(dtype == jnp.float64):
+    with enable_x64(dtype == jnp.float64):
         pdn = build_from_level_sizes(sizes, gpus_per_server=4)
         rng = np.random.default_rng(0)
         x = jnp.asarray(rng.normal(size=pdn.n), dtype)
