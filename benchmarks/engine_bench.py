@@ -1,0 +1,169 @@
+"""Persistent-engine benchmark (ISSUE 2 acceptance evidence).
+
+Measures, per fleet size:
+
+* the rebuild-every-step path: ``AllocProblem.build`` + ``optimize`` every
+  control interval (the legacy ``PowerController.step`` inner loop), warm
+  carried across steps;
+* ``AllocEngine.step``: compile-once / zero-rebuild, cold (first step,
+  includes compilation) vs steady-state, plus output parity vs the rebuild
+  path;
+* batched steady-state throughput (``AllocEngine.step_batched``, K
+  scenarios per compiled dispatch, warm carried).
+
+Emits the machine-readable ``BENCH_engine.json`` consumed by CI's
+bench-smoke job and tracked across PRs:
+
+    PYTHONPATH=src python benchmarks/engine_bench.py [--smoke|--full] \
+        [--out artifacts/bench]
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.engine import AllocEngine
+from repro.core.nvpax import optimize
+from repro.core.problem import AllocProblem
+from repro.pdn.tree import build_from_level_sizes
+
+# uniform-tree geometries per device count (branching, gpus_per_server)
+GEOMETRIES = {
+    64: ([2, 4], 8),
+    256: ([2, 4, 4], 8),
+    512: ([2, 4, 8], 8),
+    1024: ([4, 4, 8], 8),
+    2048: ([4, 8, 8], 8),
+    12288: ([4, 24, 16], 8),  # the paper's production geometry
+}
+
+
+def _telemetry(n: int, steps: int, seed: int) -> list[np.ndarray]:
+    """Slowly-drifting random-walk telemetry (steady-state control load)."""
+    rng = np.random.default_rng(seed)
+    base = rng.uniform(150, 650, n)
+    out = []
+    for _ in range(steps):
+        base = np.clip(base + rng.normal(0, 15, n), 60, 690)
+        out.append(base.copy())
+    return out
+
+
+def bench_fleet(n: int, steps: int = 6, K: int = 8, seed: int = 0) -> dict:
+    level_sizes, gpus = GEOMETRIES[n]
+    pdn = build_from_level_sizes(list(level_sizes), gpus_per_server=gpus)
+    assert pdn.n == n, (pdn.n, n)
+    teles = _telemetry(n, steps + 1, seed)
+
+    # -- rebuild-every-step path (legacy controller inner loop) ------------
+    res = optimize(AllocProblem.build(pdn, teles[0]))  # compile
+    warm = res.warm_state
+    rebuild_ms, rebuild_alloc = [], []
+    for t in range(1, steps + 1):
+        t0 = time.perf_counter()
+        ap = AllocProblem.build(pdn, teles[t])
+        res = optimize(ap, warm=warm)
+        rebuild_ms.append(1000 * (time.perf_counter() - t0))
+        warm = res.warm_state
+        rebuild_alloc.append(res.allocation)
+
+    # -- persistent engine --------------------------------------------------
+    engine = AllocEngine(pdn)
+    t0 = time.perf_counter()
+    engine.step(teles[0])
+    cold_ms = 1000 * (time.perf_counter() - t0)  # includes compilation
+    # the first warm-carried step compiles the second (carry) jit variant;
+    # prime it so the steady-state numbers measure dispatch, not compile
+    engine.reset_warm()
+    engine.step(teles[0])
+    engine.step(teles[0])
+    engine_ms, max_dev = [], 0.0
+    for t in range(1, steps + 1):
+        t0 = time.perf_counter()
+        res_e = engine.step(teles[t])
+        engine_ms.append(1000 * (time.perf_counter() - t0))
+        max_dev = max(
+            max_dev, float(np.abs(res_e.allocation - rebuild_alloc[t - 1]).max())
+        )
+
+    # -- batched steady-state throughput ------------------------------------
+    rng = np.random.default_rng(seed + 1)
+    tb = np.clip(teles[0] + rng.normal(0, 15, (K, n)), 60, 690)
+    engine.step_batched(tb)  # compiles the cold batched variant
+    engine.step_batched(tb)  # compiles the warm-carry variant
+    t0 = time.perf_counter()
+    engine.step_batched(np.clip(tb + rng.normal(0, 15, (K, n)), 60, 690))
+    batched_s = time.perf_counter() - t0
+
+    rebuild_mean = float(np.mean(rebuild_ms))
+    engine_mean = float(np.mean(engine_ms))
+    return {
+        "n_devices": n,
+        "steps": steps,
+        "rebuild_ms_mean": rebuild_mean,
+        "engine_cold_ms": cold_ms,
+        "engine_ms_mean": engine_mean,
+        "engine_speedup": rebuild_mean / engine_mean,
+        "engine_rebuild_max_dev_W": max_dev,
+        "batched_K": K,
+        "batched_ms": 1000 * batched_s,
+        "batched_solves_per_s": K / batched_s,
+    }
+
+
+def run(ns=(512, 2048), steps: int = 6, K: int = 8) -> dict:
+    fleets = [bench_fleet(n, steps=steps, K=K) for n in ns]
+    # ISSUE 2 acceptance: >= 5x steady-state at n = 512 on CPU, engine
+    # output matching the rebuild path to <= 1e-9 W.  (At paper scale the
+    # convex solves themselves dominate both paths, so the host-overhead
+    # speedup tapers: ~38x @512, ~19x @2048, ~2.5x @12288.)
+    at512 = [f for f in fleets if f["n_devices"] == 512]
+    return {
+        "fleets": fleets,
+        "meets_5x_at_512": bool(
+            at512 and all(f["engine_speedup"] >= 5.0 for f in at512)
+        ),
+        "max_dev_W": max(f["engine_rebuild_max_dev_W"] for f in fleets),
+    }
+
+
+def main() -> None:
+    import argparse
+    import json
+    import os
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fleet, 3 steps (CI bench-smoke job)")
+    ap.add_argument("--full", action="store_true",
+                    help="adds the paper-scale 12288-device fleet")
+    ap.add_argument("--out", default="artifacts/bench")
+    args = ap.parse_args()
+
+    if args.smoke:
+        res = run(ns=(64,), steps=3, K=2)
+    elif args.full:
+        res = run(ns=(512, 2048, 12288), steps=6, K=8)
+    else:
+        res = run()
+
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, "BENCH_engine.json")
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    for row in res["fleets"]:
+        print(
+            f"n={row['n_devices']}: rebuild {row['rebuild_ms_mean']:.1f}ms -> "
+            f"engine {row['engine_ms_mean']:.1f}ms "
+            f"(x{row['engine_speedup']:.1f}, cold {row['engine_cold_ms']:.0f}ms) "
+            f"dev {row['engine_rebuild_max_dev_W']:.2e} W; "
+            f"batched {row['batched_solves_per_s']:.1f} solves/s",
+            flush=True,
+        )
+    print(f"wrote {path}; meets_5x_at_512={res['meets_5x_at_512']}")
+
+
+if __name__ == "__main__":
+    main()

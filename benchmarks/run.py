@@ -22,6 +22,7 @@ def main() -> None:
 
     from benchmarks import (
         ablation_oversub,
+        engine_bench,
         kernel_bench,
         nonuniform,
         roofline,
@@ -32,6 +33,15 @@ def main() -> None:
     )
 
     suite = [
+        # machine-readable engine perf trajectory (tracked across PRs; also
+        # emitted standalone by `python benchmarks/engine_bench.py`)
+        (
+            "BENCH_engine",
+            lambda: engine_bench.run(
+                ns=(512, 2048, 12288) if args.full else (512, 2048),
+                steps=6 if args.full else 4,
+            ),
+        ),
         ("nonuniform_appendix_a", lambda: nonuniform.run()),
         (
             "satisfaction_trace_fig2",
@@ -77,6 +87,12 @@ def main() -> None:
             json.dump(res, f, indent=1)
         line = f"[{status}] {name} ({dt:.1f}s)"
         headline = {
+            "BENCH_engine": lambda r: " | ".join(
+                f"n={row['n_devices']}: engine {row['engine_ms_mean']:.1f}ms "
+                f"(x{row['engine_speedup']:.1f} vs rebuild, "
+                f"dev {row['engine_rebuild_max_dev_W']:.1e} W)"
+                for row in r["fleets"]
+            ) + f" | 5x@512: {r['meets_5x_at_512']}",
             "nonuniform_appendix_a": lambda r: (
                 f"S_nvpax={r['S_nvpax']:.2f}% (paper 83.26) "
                 f"S_greedy={r['S_greedy']:.2f}% (paper 73.94)"

@@ -62,6 +62,7 @@ __all__ = [
     "stack_problems",
     "solve_three_phase",
     "optimize_batched",
+    "calibrate_iter_cost",
 ]
 
 
@@ -101,7 +102,7 @@ class BatchedAllocResult:
     allocation: np.ndarray  # [K, n] final feasible allocations
     phase1: np.ndarray  # [K, n]
     phase2: np.ndarray  # [K, n]
-    warm_state: Any  # batched pdhg.SolverState ([K, ...] leaves)
+    warm_state: Any  # batched phases.WarmCarry ([K, ...] leaves)
     wall_time_s: float
     stats: dict[str, Any]  # per-scenario arrays: solves/iterations/converged
 
@@ -222,8 +223,18 @@ def _maxmin_loop(
     meta: BatchMeta,
     opts: pdhg.SolverOptions,
     warm: pdhg.SolverState,
+    iters_before: jnp.ndarray | None = None,
+    budget: jnp.ndarray | None = None,
 ) -> BatchedStepState:
-    """Algorithm 2 as a ``lax.while_loop`` (Phase II/III shared driver)."""
+    """Algorithm 2 as a ``lax.while_loop`` (Phase II/III shared driver).
+
+    ``budget`` (with ``iters_before``, the cumulative PDHG iterations spent
+    by earlier phases) is the anytime/deadline mode: the saturation loop
+    stops as soon as the cumulative iteration count crosses the budget.
+    Every round ends with the exact feasibility repair, so the truncated
+    allocation is feasible — the same phase/round-boundary-anytime property
+    the host driver gets from its wall-clock deadline.
+    """
     dtype = ap.l.dtype
     if meta.use_waterfill and ap.sla.k == 0:
         x_wf = waterfill_jax(x, opt_set, ap.tree, ap.u)
@@ -250,7 +261,10 @@ def _maxmin_loop(
     )
 
     def cond(st: BatchedStepState):
-        return (~st.done) & (st.solves < meta.max_rounds) & jnp.any(st.mask)
+        live = (~st.done) & (st.solves < meta.max_rounds) & jnp.any(st.mask)
+        if budget is not None:
+            live = live & (iters_before + st.iterations < budget)
+        return live
 
     def body(st: BatchedStepState) -> BatchedStepState:
         mask_f = ~(st.mask | free_set)
@@ -285,34 +299,92 @@ def solve_three_phase(
     ap: AllocProblem,
     meta: BatchMeta,
     opts: pdhg.SolverOptions,
-    warm: pdhg.SolverState | None = None,
+    warm: phases.WarmCarry | None = None,
+    iter_budget: jnp.ndarray | int | None = None,
 ):
     """One scenario's full Algorithm 3, trace-safe (jit/vmap-able).
 
-    Returns ``(x1, x2, x3, solver_state, stats_dict)`` with jnp leaves.
+    ``warm`` is the per-phase carry from the previous control step (see
+    :class:`repro.core.phases.WarmCarry`): each phase warm-starts its duals
+    from the same phase's previous end state, with the primal chained
+    through the current step — identical semantics to the host driver.
+
+    ``iter_budget`` is the deadline/anytime mode, mirroring the host
+    driver's ``NvpaxOptions.deadline_s`` semantics in iteration space
+    (callers derive the budget from a wall-clock deadline and a calibrated
+    per-iteration cost, see :func:`calibrate_iter_cost`): Phase I always
+    runs — it carries feasibility and request satisfaction — and each
+    refinement phase (II: active surplus, III: idle surplus) starts only if
+    the cumulative PDHG iteration count is still under budget, then stops at
+    the first saturation round that crosses it.  Passing a traced/concrete
+    int32 scalar changes the budget without recompilation.
+
+    Returns ``(x1, x2, x3, warm_carry, stats_dict)`` with jnp leaves;
+    ``stats["truncated"]`` is True when refinement work was skipped or cut
+    short by the budget.
     """
     n, m, k = ap.n, ap.tree.m, ap.sla.k
     dtype = ap.l.dtype
-    solver = warm if warm is not None else pdhg.SolverState.zeros(n, m, k, dtype)
+    w1 = warm.p1 if warm is not None else pdhg.SolverState.zeros(n, m, k, dtype)
+    budget = None if iter_budget is None else jnp.asarray(iter_budget, jnp.int32)
 
-    p1 = _phase1_scan(ap, meta, opts, solver)
-    x1, solver = p1.x, p1.solver
+    p1 = _phase1_scan(ap, meta, opts, w1)
+    x1 = p1.x
+    truncated = jnp.asarray(False)
 
+    def skipped(x, solver) -> BatchedStepState:
+        return BatchedStepState(
+            x=x,
+            solver=solver,
+            mask=jnp.zeros_like(ap.active),
+            solves=jnp.zeros((), jnp.int32),
+            iterations=jnp.zeros((), jnp.int32),
+            converged=jnp.asarray(True),
+            done=jnp.asarray(False),
+        )
+
+    def refine(x, solver, opt_set, free_set, iters_before):
+        """One budget-gated max-min phase; returns (state, truncated_flag)."""
+        if budget is None:
+            st = _maxmin_loop(ap, x, opt_set, free_set, meta, opts, solver)
+            return st, jnp.asarray(False)
+        start_ok = iters_before < budget
+
+        def run(args):
+            return _maxmin_loop(
+                ap, args[0], opt_set, free_set, meta, opts, args[1],
+                iters_before, budget,
+            )
+
+        st = lax.cond(start_ok, run, lambda args: skipped(*args), (x, solver))
+        # cut short: phase never started, or the loop exited on the budget
+        # test with unsaturated optimizable devices still holding head-room
+        work_left = (~st.done) & jnp.any(st.mask) & (st.solves < meta.max_rounds)
+        cut = (~start_ok) | (work_left & (iters_before + st.iterations >= budget))
+        return st, cut
+
+    w2 = phases.merge_warm(p1.solver, warm.p2 if warm is not None else None)
     if meta.run_phase2:
-        p2 = _maxmin_loop(ap, x1, ap.active, ap.idle, meta, opts, solver)
-        x2, solver = p2.x, p2.solver
+        p2, cut2 = refine(x1, w2, ap.active, ap.idle, p1.iterations)
+        x2 = p2.x
+        truncated = truncated | cut2
     else:
-        p2 = p1._replace(solves=jnp.zeros((), jnp.int32),
+        p2 = p1._replace(solver=w2,
+                         solves=jnp.zeros((), jnp.int32),
                          iterations=jnp.zeros((), jnp.int32),
                          converged=jnp.asarray(True))
         x2 = x1
 
+    w3 = phases.merge_warm(p2.solver, warm.p3 if warm is not None else None)
     if meta.run_phase3:
         empty = jnp.zeros_like(ap.active)
-        p3 = _maxmin_loop(ap, x2, ap.idle, empty, meta, opts, solver)
-        x3, solver = p3.x, p3.solver
+        p3, cut3 = refine(x2, w3, ap.idle, empty,
+                          p1.iterations + p2.iterations)
+        x3 = p3.x
+        truncated = truncated | cut3
     else:
-        p3 = p2._replace(solves=jnp.zeros((), jnp.int32),
+        p3 = p2._replace(solver=w3,
+                         solves=jnp.zeros((), jnp.int32),
                          iterations=jnp.zeros((), jnp.int32),
                          converged=jnp.asarray(True))
         x3 = x2
@@ -321,8 +393,10 @@ def solve_three_phase(
         "solves": p1.solves + p2.solves + p3.solves,
         "iterations": p1.iterations + p2.iterations + p3.iterations,
         "converged": p1.converged & p2.converged & p3.converged,
+        "truncated": truncated,
     }
-    return x1, x2, x3, solver, stats
+    carry = phases.WarmCarry(p1.solver, p2.solver, p3.solver)
+    return x1, x2, x3, carry, stats
 
 
 @functools.partial(jax.jit, static_argnames=("meta", "opts"))
@@ -330,7 +404,8 @@ def _solve_batched(
     stacked: AllocProblem,
     meta: BatchMeta,
     opts: pdhg.SolverOptions,
-    warm: pdhg.SolverState | None,
+    warm: phases.WarmCarry | None,
+    iter_budget: jnp.ndarray | None = None,
 ):
     """vmap of the three-phase engine over the leading scenario axis."""
     tree, sla = stacked.tree, stacked.sla
@@ -340,9 +415,10 @@ def _solve_batched(
             l=l, u=u, r=r, priority=priority, active=active,
             tree=tree, sla=sla, weight_scale=weight_scale,
         )
-        return solve_three_phase(ap, meta, opts, warm_one)
+        return solve_three_phase(ap, meta, opts, warm_one, iter_budget)
 
-    warm_axes = None if warm is None else pdhg.SolverState(0, 0, 0, 0, 0)
+    # warm is a phases.WarmCarry with [K, ...] leaves (or None)
+    warm_axes = None if warm is None else 0
     return jax.vmap(one, in_axes=(0, 0, 0, 0, 0, 0, warm_axes))(
         stacked.l,
         stacked.u,
@@ -355,6 +431,43 @@ def _solve_batched(
 
 
 # ---------------------------------------------------------------------------
+# deadline calibration
+# ---------------------------------------------------------------------------
+
+# per-(shape, meta, opts) seconds-per-PDHG-iteration estimates
+_ITER_COST_CACHE: dict[Any, float] = {}
+
+
+def calibrate_iter_cost(
+    stacked: AllocProblem,
+    meta: BatchMeta,
+    opts: pdhg.SolverOptions,
+) -> float:
+    """Measured seconds per PDHG iteration of the batched program.
+
+    Runs a Phase-I-only probe (budget 1 skips both refinement phases) twice —
+    the first call pays the compile — and divides steady wall time by the
+    iterations executed.  The estimate includes per-solve overhead (power
+    iteration, KKT checks), which biases the cost high and therefore the
+    derived budgets low: deadline truncation errs on the early side, like a
+    wall-clock check would.  Cached per (shape, meta, opts).
+    """
+    key = (
+        tuple(stacked.l.shape), jnp.dtype(stacked.l.dtype).name, meta, opts,
+    )
+    if key not in _ITER_COST_CACHE:
+        probe_budget = jnp.asarray(1, jnp.int32)
+        _solve_batched(stacked, meta, opts, None, probe_budget)[2].block_until_ready()
+        t0 = time.perf_counter()
+        _, _, x3, _, stats = _solve_batched(stacked, meta, opts, None, probe_budget)
+        x3.block_until_ready()
+        wall = time.perf_counter() - t0
+        iters = int(np.max(np.asarray(stats["iterations"])))
+        _ITER_COST_CACHE[key] = wall / max(iters, 1)
+    return _ITER_COST_CACHE[key]
+
+
+# ---------------------------------------------------------------------------
 # public entry point
 # ---------------------------------------------------------------------------
 
@@ -362,7 +475,10 @@ def _solve_batched(
 def optimize_batched(
     aps: Sequence[AllocProblem] | AllocProblem,
     options: NvpaxOptions = NvpaxOptions(),
-    warm: pdhg.SolverState | None = None,
+    warm: phases.WarmCarry | None = None,
+    *,
+    meta: BatchMeta | None = None,
+    iter_budget: int | None = None,
 ) -> BatchedAllocResult:
     """Run Algorithm 3 on K scenarios as ONE jitted+vmapped program.
 
@@ -370,8 +486,21 @@ def optimize_batched(
     sharing PDN/SLA topology, or an already-stacked problem with ``[K, n]``
     fleet leaves (see :func:`stack_problems`).  ``warm`` optionally carries
     a batched solver state from a previous batched call (``[K, ...]``
-    leaves).  ``options.deadline_s`` is ignored: the batched engine is a
-    single accelerator program with no phase-boundary host hops.
+    leaves) — e.g. the previous control step's, which cuts solver iterations
+    on slowly-drifting telemetry (asserted in ``tests/test_engine.py``).
+
+    ``meta`` pins the engine compilation (e.g. a topology-pinned
+    :class:`repro.core.engine.AllocEngine` passes its construction-time
+    metadata so per-step active-set changes cannot retrigger compilation);
+    by default it is derived from the stacked problem.
+
+    Deadline mode: ``options.deadline_s`` is honored by translating the
+    wall-clock deadline into a per-scenario PDHG iteration budget via
+    :func:`calibrate_iter_cost` (one-time per shape) — Phase I always runs,
+    refinement phases are skipped or cut at saturation-round granularity,
+    and ``stats["truncated"]`` reports per-scenario truncation, matching the
+    host path's phase-boundary anytime semantics.  ``iter_budget`` passes an
+    explicit budget instead (overrides ``deadline_s``).
 
     Output matches per-scenario :func:`repro.core.nvpax.optimize` to solver
     tolerance (asserted in ``tests/test_batched.py``).
@@ -384,9 +513,16 @@ def optimize_batched(
             raise ValueError(
                 f"expected stacked [K, n] fleet leaves, got shape {stacked.l.shape}"
             )
-        meta = batch_meta(stacked, options)
+        if meta is None:
+            meta = batch_meta(stacked, options)
+        if iter_budget is None and options.deadline_s is not None:
+            cost = calibrate_iter_cost(stacked, meta, options.solver)
+            iter_budget = max(int(options.deadline_s / cost), 0)
+        budget = (
+            None if iter_budget is None else jnp.asarray(iter_budget, jnp.int32)
+        )
         x1, x2, x3, solver, stats = _solve_batched(
-            stacked, meta, options.solver, warm
+            stacked, meta, options.solver, warm, budget
         )
         x3 = x3.block_until_ready()
     wall = time.perf_counter() - t0
@@ -400,6 +536,8 @@ def optimize_batched(
             "solves": np.asarray(stats["solves"]),
             "iterations": np.asarray(stats["iterations"]),
             "converged": np.asarray(stats["converged"]),
+            "truncated": np.asarray(stats["truncated"]),
+            "iter_budget": iter_budget,
             "n_scenarios": int(stacked.l.shape[0]),
         },
     )

@@ -1,0 +1,335 @@
+"""Persistent allocation engine: compile-once control loop with zero-rebuild
+steps.
+
+:class:`AllocEngine` is the production serving shape of the allocator.  The
+per-step cost of the rebuild-every-step path (``AllocProblem.build`` +
+``nvpax.optimize``) is dominated by host-side work we re-pay every control
+interval: topology re-derivation and device upload, Python phase
+orchestration with per-solve device syncs, and host water-filling.  The
+engine is constructed **once per fleet** — PDN tree + SLA topology +
+priority layout — and then serves every control step with zero host-side
+rebuild work:
+
+* construction precomputes everything shape-static: the
+  :class:`~repro.core.problem.FleetTopology` device arrays, the
+  :class:`~repro.core.batched.BatchMeta` (priority levels from the *full*
+  priority layout, tree-depth count, the pin-free simplification) that pins
+  one compilation for the life of the engine — per-step active-set changes
+  are handled by the engine's traced empty-level skip, never by recompiling;
+* :meth:`step` is one jitted program (``solve_three_phase`` at K=1):
+  telemetry pre-processing (clip to box, idle -> l), all three phases,
+  feasibility repair — a single dispatch with no phase-boundary host hops;
+* warm starts are carried across control steps automatically, in both the
+  host (:meth:`step`) and batched (:meth:`step_batched`) paths — an
+  optimization, not a correctness dependency (:meth:`reset_warm` restores
+  cold start, e.g. after fleet geometry changes);
+* deadlines run in iteration space: ``options.deadline_s`` (or a per-call
+  override) is translated into a PDHG iteration budget via a one-time
+  calibrated per-iteration cost, giving the fully-jitted step the same
+  phase-boundary anytime semantics (``stats["truncated"]``) as the
+  wall-clock host path.
+
+The engine is topology-pinned: device failures / request changes are
+ordinary telemetry, but capacity changes (e.g. a supply drop rescaling node
+caps) need a new engine.  :class:`repro.power.PowerController` manages that
+lifecycle.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compat import enable_x64
+from repro.core import phases
+from repro.core.batched import (
+    BatchMeta,
+    BatchedAllocResult,
+    optimize_batched,
+    solve_three_phase,
+)
+from repro.core.nvpax import AllocResult, NvpaxOptions
+from repro.core.problem import AllocProblem, FleetTopology
+from repro.core.treeops import SlaTopo
+from repro.pdn.tree import FlatPDN
+
+__all__ = ["AllocEngine"]
+
+_UNSET = object()
+
+
+def _shape_requests(r, active, l, u):
+    """Paper section 5.2 request shaping (trace-safe): clip to the device
+    box; idle devices request ``l``.  Mirrors ``AllocProblem.build``'s host
+    numpy version — the single jnp implementation for both engine paths."""
+    return jnp.where(active, jnp.clip(r, l, u), l)
+
+
+def _engine_solve(fleet, r, priority, active, warm, iter_budget, *, meta, opts):
+    """The whole control step as one traced program: request pre-processing
+    (paper section 5.2) + three-phase solve + exact feasibility repair."""
+    r = _shape_requests(r, active, fleet.l, fleet.u)
+    ap = AllocProblem(
+        l=fleet.l,
+        u=fleet.u,
+        r=r,
+        priority=priority,
+        active=active,
+        tree=fleet.tree,
+        sla=fleet.sla,
+        weight_scale=fleet.weight_scale,
+    )
+    return solve_three_phase(ap, meta, opts, warm, iter_budget)
+
+
+# One compiled executable per (shapes, meta, opts): engines over the same
+# fleet geometry share it.  Donating the warm state (argnum 4) to reuse its
+# buffers in place on accelerators is tempting but unsafe as-is: the carried
+# state escapes via AllocResult.warm_state (the next step would invalidate
+# buffers the caller still holds), and with run_phase2/3 disabled the carry
+# aliases the same buffer in two leaves, which XLA rejects for donation.
+# Revisit with accelerator CI + a copy-on-return boundary.
+_engine_step_jit = jax.jit(_engine_solve, static_argnames=("meta", "opts"))
+
+
+class AllocEngine:
+    """Construct-once / step-many allocation runtime for one fleet.
+
+    Parameters mirror ``AllocProblem.build``: the PDN, optional tenant SLA
+    topology, a fixed priority layout, and ``NvpaxOptions``.  ``step`` then
+    takes only telemetry (+ optional scheduler active mask) and returns the
+    same :class:`~repro.core.nvpax.AllocResult` as the host path — matching
+    it to solver tolerance (see ``tests/test_engine.py``).
+    """
+
+    def __init__(
+        self,
+        pdn: FlatPDN,
+        *,
+        sla: SlaTopo | None = None,
+        priority: np.ndarray | None = None,
+        options: NvpaxOptions | None = None,
+        idle_threshold: float = 150.0,
+        normalized: bool = False,
+        dtype=jnp.float64,
+    ):
+        self.pdn = pdn
+        self.options = options or NvpaxOptions()
+        self.idle_threshold = float(idle_threshold)
+        self.dtype = dtype
+        self._x64 = bool(self.options.x64) and dtype == jnp.float64
+        with self._ctx():
+            self.fleet = FleetTopology.from_pdn(
+                pdn, sla=sla, normalized=normalized, dtype=dtype
+            )
+            if priority is None:
+                priority = np.ones((pdn.n,), np.int32)
+            self.priority_np = np.asarray(priority, np.int32)
+            if (self.priority_np < 1).any():
+                raise ValueError("priorities must be >= 1")
+            self.priority = jnp.asarray(self.priority_np)
+        sla_t = self.fleet.sla
+        pin_free = sla_t.k == 0 or not bool((np.asarray(sla_t.lo) > 0).any())
+        # levels from the full priority layout (not the per-step active set):
+        # the Phase I scan skips empty levels with a traced cond, so the
+        # compiled program is pinned while per-step semantics match the host
+        # driver's active-only sweep exactly.
+        self.meta = BatchMeta(
+            levels=tuple(sorted({int(p) for p in self.priority_np}, reverse=True)),
+            n_depths=int(pdn.node_depth.max()) + 1 if pdn.m else 0,
+            pin_free=pin_free,
+            max_rounds=self.options.max_rounds,
+            use_waterfill=self.options.use_waterfill,
+            run_phase2=self.options.run_phase2,
+            run_phase3=self.options.run_phase3,
+            eps=self.options.eps,
+        )
+        self._warm: phases.WarmCarry | None = None
+        self._batched_warm: dict[int, Any] = {}
+        self._iter_cost_s: float | None = None
+        self.history: list[dict[str, Any]] = []
+
+    def _ctx(self):
+        return enable_x64(True) if self._x64 else contextlib.nullcontext()
+
+    @property
+    def n(self) -> int:
+        return self.pdn.n
+
+    def reset_warm(self) -> None:
+        """Drop carried solver state (next step/step_batched cold-starts)."""
+        self._warm = None
+        self._batched_warm.clear()
+
+    # -- host-side request pre-processing (numpy, O(n)) --------------------
+
+    def _preprocess(self, telemetry, active):
+        req = np.asarray(telemetry, dtype=np.float64)
+        if req.shape[-1] != self.n:
+            raise ValueError(f"telemetry shape {req.shape} != (..., {self.n})")
+        if active is None:
+            active = req >= self.idle_threshold
+        return req, np.asarray(active, dtype=bool)
+
+    # -- deadline calibration ----------------------------------------------
+
+    def _budget(self, deadline_s):
+        if deadline_s is _UNSET:
+            deadline_s = self.options.deadline_s
+        if deadline_s is None:
+            return None
+        if self._iter_cost_s is None:
+            self._iter_cost_s = self._calibrate()
+        return max(int(float(deadline_s) / self._iter_cost_s), 0)
+
+    def _calibrate(self) -> float:
+        """Seconds per PDHG iteration of this engine's compiled step.
+
+        Times a Phase-I-only probe (budget 1) on neutral telemetry, compile
+        excluded.  Like :func:`repro.core.batched.calibrate_iter_cost` the
+        estimate includes per-solve overhead, so deadline budgets err short.
+        """
+        tele = np.asarray(self.pdn.dev_u, np.float64)
+        req, act = self._preprocess(tele, None)
+        with self._ctx():
+            args = (
+                self.fleet,
+                jnp.asarray(req, self.dtype),
+                self.priority,
+                jnp.asarray(act),
+                None,
+                jnp.asarray(1, jnp.int32),
+            )
+            out = _engine_step_jit(*args, meta=self.meta, opts=self.options.solver)
+            out[2].block_until_ready()
+            t0 = time.perf_counter()
+            out = _engine_step_jit(*args, meta=self.meta, opts=self.options.solver)
+            out[2].block_until_ready()
+            wall = time.perf_counter() - t0
+        iters = int(out[4]["iterations"])
+        return wall / max(iters, 1)
+
+    # -- single-scenario control step --------------------------------------
+
+    def step(
+        self,
+        telemetry: np.ndarray,
+        *,
+        active: np.ndarray | None = None,
+        deadline_s: float | None = _UNSET,  # type: ignore[assignment]
+    ) -> AllocResult:
+        """One control step: telemetry [n] watts -> allocation (caps).
+
+        Zero rebuild work: the only host-side cost is the O(n) request
+        pre-processing and the telemetry/active transfer; everything else is
+        one compiled program, warm-started from the previous step.
+        """
+        req, act = self._preprocess(telemetry, active)
+        budget = self._budget(deadline_s)
+        t0 = time.perf_counter()
+        with self._ctx():
+            # None (cold) and carry (steady) are two jit variants; the cold
+            # one must stay warm=None so its phase chaining is bit-identical
+            # to the host driver's cold path.
+            x1, x2, x3, solver, stats = _engine_step_jit(
+                self.fleet,
+                jnp.asarray(req, self.dtype),
+                self.priority,
+                jnp.asarray(act),
+                self._warm,
+                None if budget is None else jnp.asarray(budget, jnp.int32),
+                meta=self.meta,
+                opts=self.options.solver,
+            )
+            x3 = x3.block_until_ready()
+        wall = time.perf_counter() - t0
+        self._warm = solver
+        res = AllocResult(
+            allocation=np.asarray(x3),
+            phase1=np.asarray(x1),
+            phase2=np.asarray(x2),
+            warm_state=solver,
+            wall_time_s=wall,
+            stats={
+                "total_solves": int(stats["solves"]),
+                "total_iterations": int(stats["iterations"]),
+                "converged": bool(stats["converged"]),
+                "truncated": bool(stats["truncated"]),
+                "iter_budget": budget,
+            },
+        )
+        self.history.append(
+            {
+                "wall_s": wall,
+                "converged": res.stats["converged"],
+                "solves": res.stats["total_solves"],
+                "iterations": res.stats["total_iterations"],
+                "truncated": res.stats["truncated"],
+            }
+        )
+        return res
+
+    # -- batched control step ----------------------------------------------
+
+    def step_batched(
+        self,
+        telemetry_batch: np.ndarray,
+        *,
+        active: np.ndarray | None = None,
+        carry_warm: bool = True,
+    ) -> BatchedAllocResult:
+        """K scenarios in one compiled program, warm-carried across steps.
+
+        ``telemetry_batch`` is ``[K, n]`` watts; ``active`` is ``[n]``
+        (shared placement) or ``[K, n]``.  The batched solver state is
+        carried per batch size K across consecutive calls (``carry_warm``),
+        which cuts mean solver iterations on slowly-drifting telemetry;
+        disable it for independent what-if sweeps.  ``options.deadline_s``
+        is honored via the batched iteration-budget mode.
+        """
+        tb = np.asarray(telemetry_batch, dtype=np.float64)
+        if tb.ndim != 2 or tb.shape[0] == 0:
+            raise ValueError(
+                f"telemetry_batch must be [K, n] with K >= 1, got {tb.shape}"
+            )
+        K, n = tb.shape
+        if n != self.n:
+            raise ValueError(f"telemetry_batch n {n} != fleet n {self.n}")
+        if active is not None:
+            active = np.asarray(active, bool)
+            if active.shape == (n,):
+                active = np.broadcast_to(active, (K, n))
+            elif active.shape != (K, n):
+                raise ValueError(
+                    f"active must be [{n}] or [{K}, {n}], got {active.shape}"
+                )
+        req, act = self._preprocess(tb, active)
+        with self._ctx():
+            fl = self.fleet
+            act_dev = jnp.asarray(act)
+            r = _shape_requests(jnp.asarray(req, self.dtype), act_dev, fl.l, fl.u)
+            stacked = AllocProblem(
+                l=jnp.broadcast_to(fl.l, (K, n)),
+                u=jnp.broadcast_to(fl.u, (K, n)),
+                r=r,
+                priority=jnp.broadcast_to(self.priority, (K, n)),
+                active=act_dev,
+                tree=fl.tree,
+                sla=fl.sla,
+                weight_scale=jnp.broadcast_to(fl.weight_scale, (K, n)),
+            )
+            res = optimize_batched(
+                stacked,
+                self.options,
+                warm=self._batched_warm.get(K) if carry_warm else None,
+                meta=self.meta,
+            )
+        if carry_warm:
+            self._batched_warm[K] = res.warm_state
+        return res

@@ -42,7 +42,12 @@ class NvpaxOptions:
     # refinement phases (II: active surplus, III: idle surplus) are
     # truncated and the best-so-far allocation is returned with
     # stats["truncated"]=True.  Phase I always runs: it carries feasibility
-    # and request satisfaction.
+    # and request satisfaction.  The host path (this module) checks wall
+    # clock at phase boundaries; the fully-jitted paths
+    # (repro.core.batched.optimize_batched, repro.core.engine.AllocEngine)
+    # translate the deadline into a PDHG iteration budget via a calibrated
+    # per-iteration cost and truncate at saturation-round granularity with
+    # the same stats["truncated"] reporting.
     deadline_s: float | None = None
 
 
@@ -51,7 +56,7 @@ class AllocResult:
     allocation: np.ndarray  # [n] final feasible allocation (phase III output)
     phase1: np.ndarray
     phase2: np.ndarray
-    warm_state: Any  # pdhg.SolverState for the next control step
+    warm_state: Any  # phases.WarmCarry for the next control step
     wall_time_s: float
     stats: dict[str, Any]
 
@@ -59,9 +64,15 @@ class AllocResult:
 def optimize(
     ap: AllocProblem,
     options: NvpaxOptions = NvpaxOptions(),
-    warm: pdhg.SolverState | None = None,
+    warm: phases.WarmCarry | None = None,
 ) -> AllocResult:
-    """Run Algorithm 3 on one control step's problem."""
+    """Run Algorithm 3 on one control step's problem.
+
+    ``warm`` is the per-phase carry returned as ``AllocResult.warm_state``
+    by the previous control step (see :class:`repro.core.phases.WarmCarry`);
+    it is an optimization, not a correctness dependency — warm and cold
+    steps agree to solver tolerance.
+    """
     ctx = enable_x64(True) if options.x64 else contextlib.nullcontext()
     t0 = time.perf_counter()
 
@@ -73,9 +84,13 @@ def optimize(
 
     truncated = False
     with ctx:
-        x1, state, s1 = phases.phase1(ap, options.solver, options.eps, warm)
+        x1, state, s1 = phases.phase1(
+            ap, options.solver, options.eps, warm.p1 if warm else None
+        )
+        carry1 = state
         x2 = x1
         s2 = phases.PhaseStats(0, 0, True, 0.0)
+        state = phases.merge_warm(state, warm.p2 if warm else None)
         if options.run_phase2 and in_budget():
             x2, state, s2 = phases.run_maxmin_phase(
                 ap, x1, ap.active, ap.idle, options.solver, options.eps, state,
@@ -83,8 +98,10 @@ def optimize(
             )
         elif options.run_phase2:
             truncated = True
+        carry2 = state
         x3 = x2
         s3 = phases.PhaseStats(0, 0, True, 0.0)
+        state = phases.merge_warm(state, warm.p3 if warm else None)
         if options.run_phase3 and in_budget():
             empty = jnp.zeros_like(ap.active)
             x3, state, s3 = phases.run_maxmin_phase(
@@ -93,13 +110,14 @@ def optimize(
             )
         elif options.run_phase3:
             truncated = True
+        carry3 = state
         x3 = x3.block_until_ready()
     wall = time.perf_counter() - t0
     return AllocResult(
         allocation=np.asarray(x3),
         phase1=np.asarray(x1),
         phase2=np.asarray(x2),
-        warm_state=state,
+        warm_state=phases.WarmCarry(carry1, carry2, carry3),
         wall_time_s=wall,
         stats={
             "phase1": s1._asdict(),

@@ -58,6 +58,14 @@ class SolverOptions(NamedTuple):
     theta: float = 0.9  # step-size safety: tau*sigma*||K||^2 = theta^2
     omega0: float = 0.0  # initial primal weight; <= 0 -> auto
     power_iters: int = 40
+    # fused Pallas update kernels (repro.kernels.pdhg_update) for the
+    # n-sized primal/dual blocks of the inner iteration; the tiny SLA block
+    # and the scalar t stay jnp.  Parity with the pure-jnp path is asserted
+    # in tests/test_kernels.py.
+    use_pallas: bool = False
+    # None -> auto: interpret mode off only on TPU (the BlockSpecs are
+    # TPU-shaped; every other backend runs the traced interpreter).
+    pallas_interpret: bool | None = None
 
 
 class SolverState(NamedTuple):
@@ -317,28 +325,52 @@ def solve(
 
     theta = jnp.asarray(opts.theta, dtype)
 
+    if opts.use_pallas:
+        from repro.kernels.pdhg_update import ops as _pk
+
+        interpret = (
+            _pk.default_interpret()
+            if opts.pallas_interpret is None
+            else opts.pallas_interpret
+        )
+
     def pdhg_iter(carry, _):
         x, t, y_tree, y_sla, y_imp, omega = carry
         tau = theta * omega / knorm
         sigma = theta / (omega * knorm)
         gx, gt = _rmatvec(y_tree, y_sla, y_imp, tree, sla, sc, n)
-        # primal prox (diagonal quadratic + box)
-        x1 = jnp.clip(
-            (x - tau * (gx + c_s) + tau * w_s * target_s) / (1.0 + tau * w_s),
-            lo_s,
-            hi_s,
-        )
+        if opts.use_pallas:
+            # fused primal prox + extrapolation, one HBM round-trip
+            x1, xe = _pk.primal_update(
+                x, gx, c_s, w_s, target_s, lo_s, hi_s, tau, interpret=interpret
+            )
+        else:
+            # primal prox (diagonal quadratic + box)
+            x1 = jnp.clip(
+                (x - tau * (gx + c_s) + tau * w_s * target_s) / (1.0 + tau * w_s),
+                lo_s,
+                hi_s,
+            )
+            xe = 2.0 * x1 - x
         t1 = jnp.clip(t - tau * (gt + ct_s), tlo_s, thi_s)
         # dual with extrapolation
-        xe, te = 2.0 * x1 - x, 2.0 * t1 - t
+        te = 2.0 * t1 - t
         a_tree, a_sla, a_imp = _matvec(xe, te, tree, sla, sc)
-        y_tree1 = _dual_prox(y_tree + sigma * a_tree, sigma, neg_inf_tree, tree_hi_s)
+        if opts.use_pallas:
+            y_tree1 = _pk.dual_prox(
+                y_tree, a_tree, sigma, neg_inf_tree, tree_hi_s, interpret=interpret
+            )
+            y_imp1 = _pk.dual_prox(
+                y_imp, a_imp, sigma, imp_lo_s, pos_inf_imp, interpret=interpret
+            )
+        else:
+            y_tree1 = _dual_prox(y_tree + sigma * a_tree, sigma, neg_inf_tree, tree_hi_s)
+            y_imp1 = _dual_prox(y_imp + sigma * a_imp, sigma, imp_lo_s, pos_inf_imp)
         y_sla1 = (
             _dual_prox(y_sla + sigma * a_sla, sigma, sla_lo_s, sla_hi_s)
             if k
             else y_sla
         )
-        y_imp1 = _dual_prox(y_imp + sigma * a_imp, sigma, imp_lo_s, pos_inf_imp)
         return (x1, t1, y_tree1, y_sla1, y_imp1, omega), None
 
     def run_chunk(state6):

@@ -21,6 +21,8 @@ from repro.core.treeops import sla_matvec, sla_rmatvec, tree_matvec, tree_rmatve
 
 __all__ = [
     "PhaseStats",
+    "WarmCarry",
+    "merge_warm",
     "repair",
     "saturated_mask",
     "phase1",
@@ -40,6 +42,47 @@ class PhaseStats(NamedTuple):
     iterations: int
     converged: bool
     max_primal_res: float
+
+
+class WarmCarry(NamedTuple):
+    """Per-phase warm-start carry across control steps.
+
+    Each phase's convex program has a distinct dual geometry (Phase I: QP
+    duals on tree/SLA rows; Phases II/III: max-min LP duals including the
+    improvement rows), so each phase warm-starts its *duals* from the SAME
+    phase's end state at the previous control step, while the primal chains
+    through the current step's phases as before.  Carrying the single
+    post-Phase-III state into the next Phase I — the previous design — was
+    measured to *increase* Phase I iterations on tenant-SLA fleets (LP duals
+    poison the QP), whereas the phase-matched carry cuts the max-min rounds'
+    iteration counts on drifting telemetry (asserted in
+    ``tests/test_engine.py``).
+
+    A pytree of :class:`repro.core.pdhg.SolverState` leaves, so the same
+    carry works for the host driver (:func:`repro.core.nvpax.optimize`), the
+    fully-jitted engine, and the vmapped batched path (``[K, ...]`` leaves).
+    """
+
+    p1: pdhg.SolverState
+    p2: pdhg.SolverState
+    p3: pdhg.SolverState
+
+    @classmethod
+    def zeros(cls, n: int, m: int, k: int, dtype) -> "WarmCarry":
+        z = pdhg.SolverState.zeros(n, m, k, dtype)
+        return cls(z, z, z)
+
+
+def merge_warm(
+    chain: pdhg.SolverState, carry: pdhg.SolverState | None
+) -> pdhg.SolverState:
+    """Phase-matched warm start: primal (and t) chain within the step; duals
+    come from the same phase's end state at the previous control step."""
+    if carry is None:
+        return chain
+    return pdhg.SolverState(
+        chain.x, chain.t, carry.y_tree, carry.y_sla, carry.y_imp
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -30,9 +30,67 @@ import numpy as np
 from repro.core.treeops import SlaTopo, TreeTopo
 from repro.pdn.tree import FlatPDN
 
-__all__ = ["AllocProblem", "StepProblem", "INF"]
+__all__ = ["AllocProblem", "FleetTopology", "StepProblem", "INF"]
 
 INF = float("inf")
+
+
+class FleetTopology(NamedTuple):
+    """Shape-static fleet data pre-converted to device arrays.
+
+    Everything in :class:`AllocProblem` that does not change between control
+    steps — PDN tree, tenant SLA topology, device boxes, deviation scales —
+    lives here so the per-step build is only telemetry -> device arrays.
+    Construct once per fleet with :meth:`from_pdn` and pass to
+    ``AllocProblem.build(..., topology=...)`` (or use
+    :class:`repro.core.engine.AllocEngine`, which owns one).
+    """
+
+    tree: TreeTopo
+    sla: SlaTopo
+    l: jnp.ndarray  # [n]
+    u: jnp.ndarray  # [n]
+    weight_scale: jnp.ndarray  # [n]
+
+    @property
+    def n(self) -> int:
+        return self.l.shape[0]
+
+    @classmethod
+    def from_pdn(
+        cls,
+        pdn: FlatPDN,
+        *,
+        sla: SlaTopo | None = None,
+        normalized: bool = False,
+        dtype=jnp.float64,
+    ) -> "FleetTopology":
+        import contextlib
+
+        from repro.compat import enable_x64
+
+        ctx = enable_x64(True) if dtype == jnp.float64 else contextlib.nullcontext()
+        with ctx:
+            if sla is None:
+                sla = SlaTopo.empty(dtype)
+            weight_scale = (1.0 / pdn.dev_u) if normalized else np.ones((pdn.n,))
+            return cls(
+                tree=TreeTopo(
+                    start=jnp.asarray(pdn.node_start),
+                    end=jnp.asarray(pdn.node_end),
+                    cap=jnp.asarray(pdn.node_cap, dtype),
+                    depth=jnp.asarray(pdn.node_depth),
+                ),
+                sla=SlaTopo(
+                    dev=jnp.asarray(sla.dev, jnp.int32),
+                    ten=jnp.asarray(sla.ten, jnp.int32),
+                    lo=jnp.asarray(sla.lo, dtype),
+                    hi=jnp.asarray(sla.hi, dtype),
+                ),
+                l=jnp.asarray(pdn.dev_l, dtype),
+                u=jnp.asarray(pdn.dev_u, dtype),
+                weight_scale=jnp.asarray(weight_scale, dtype),
+            )
 
 
 class AllocProblem(NamedTuple):
@@ -101,6 +159,7 @@ class AllocProblem(NamedTuple):
         sla: SlaTopo | None = None,
         normalized: bool = False,
         dtype=jnp.float64,
+        topology: FleetTopology | None = None,
     ) -> "AllocProblem":
         """Assemble a control-step problem from a flattened PDN + telemetry.
 
@@ -108,6 +167,12 @@ class AllocProblem(NamedTuple):
         are clipped to ``[l, u]``; a device is idle if its raw request is
         below ``idle_threshold`` (unless an explicit ``active`` mask, e.g.
         from the job scheduler, is given); idle devices request ``l``.
+
+        ``topology`` is the zero-rebuild fast path: a prebuilt
+        :class:`FleetTopology` whose device arrays are reused as-is, so the
+        per-step host work is only the O(n) request pre-processing plus the
+        telemetry transfer (``sla``/``normalized`` are then taken from the
+        topology and must not be passed).
         """
         n = pdn.n
         requests = np.asarray(requests, dtype=np.float64)
@@ -123,7 +188,6 @@ class AllocProblem(NamedTuple):
         priority = np.asarray(priority, dtype=np.int32)
         if (priority < 1).any():
             raise ValueError("priorities must be >= 1")
-        weight_scale = (1.0 / pdn.dev_u) if normalized else np.ones((n,))
         # f64 conversion must happen under an x64 context or jax silently
         # truncates to f32.
         import contextlib
@@ -132,32 +196,24 @@ class AllocProblem(NamedTuple):
 
         ctx = enable_x64(True) if dtype == jnp.float64 else contextlib.nullcontext()
         with ctx:
-            if sla is None:
-                sla = SlaTopo.empty(dtype)
-            return cls._assemble(pdn, r, priority, active, sla, weight_scale, dtype)
-
-    @classmethod
-    def _assemble(cls, pdn, r, priority, active, sla, weight_scale, dtype):
-        return cls(
-            l=jnp.asarray(pdn.dev_l, dtype),
-            u=jnp.asarray(pdn.dev_u, dtype),
-            r=jnp.asarray(r, dtype),
-            priority=jnp.asarray(priority),
-            active=jnp.asarray(active),
-            tree=TreeTopo(
-                start=jnp.asarray(pdn.node_start),
-                end=jnp.asarray(pdn.node_end),
-                cap=jnp.asarray(pdn.node_cap, dtype),
-                depth=jnp.asarray(pdn.node_depth),
-            ),
-            sla=SlaTopo(
-                dev=sla.dev,
-                ten=sla.ten,
-                lo=jnp.asarray(sla.lo, dtype),
-                hi=jnp.asarray(sla.hi, dtype),
-            ),
-            weight_scale=jnp.asarray(weight_scale, dtype),
-        )
+            if topology is None:
+                topology = FleetTopology.from_pdn(
+                    pdn, sla=sla, normalized=normalized, dtype=dtype
+                )
+            elif sla is not None or normalized:
+                raise ValueError(
+                    "sla/normalized are fixed by the prebuilt topology"
+                )
+            return cls(
+                l=topology.l,
+                u=topology.u,
+                r=jnp.asarray(r, dtype),
+                priority=jnp.asarray(priority),
+                active=jnp.asarray(active),
+                tree=topology.tree,
+                sla=topology.sla,
+                weight_scale=topology.weight_scale,
+            )
 
 
 class StepProblem(NamedTuple):

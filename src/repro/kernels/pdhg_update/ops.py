@@ -2,10 +2,20 @@
 
 ``interpret`` defaults to True because this container has no TPU; the
 launcher flips it off on real hardware (the BlockSpecs are TPU-shaped).
+:func:`default_interpret` is the backend-aware switch used by
+``repro.core.pdhg.solve`` when ``SolverOptions.use_pallas`` is set with
+``pallas_interpret=None``.
 """
 
 from __future__ import annotations
 
+import jax
+
 from repro.kernels.pdhg_update.kernel import dual_prox, primal_update
 
-__all__ = ["primal_update", "dual_prox"]
+__all__ = ["primal_update", "dual_prox", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    """Real Pallas lowering only on TPU; the traced interpreter elsewhere."""
+    return jax.default_backend() != "tpu"

@@ -4,16 +4,25 @@ Every control interval (30 s in the paper) the controller:
   1. collects per-device power telemetry (or job-model predictions),
   2. classifies active/idle (scheduler info when available, else the
      150 W power threshold),
-  3. builds the constraint problem (PDN tree + tenant SLAs + priorities),
-  4. runs nvPAX (warm-started from the previous step),
-  5. returns enforceable per-device caps.
+  3. hands the pre-processed requests to the persistent allocation engine
+     (:class:`repro.core.engine.AllocEngine`) — constructed once per fleet
+     topology, serving every step with zero host-side rebuild work and
+     warm-started solver state in both the host and batched paths,
+  4. returns enforceable per-device caps.
+
+``ControllerConfig(use_engine=False)`` selects the legacy
+rebuild-every-step path (``AllocProblem.build`` + ``nvpax.optimize`` per
+step); the engine path matches it to solver tolerance (see
+``tests/test_engine.py``) while being several times faster per interval
+(``benchmarks/engine_bench.py``).
 
 Fault handling follows the paper: device failures and supply drops are
 handled implicitly — the next cycle simply rebuilds the problem from
 current state (failed devices are masked to zero-width boxes; a supply
-drop rescales node capacities) and recomputes a feasible allocation from
-scratch.  No controller state must survive a crash: the warm-start is an
-optimization, not a correctness dependency.
+drop rescales node capacities, which re-pins the engine's topology) and
+recomputes a feasible allocation from scratch.  No controller state must
+survive a crash: the warm-start is an optimization, not a correctness
+dependency.
 """
 
 from __future__ import annotations
@@ -26,8 +35,9 @@ from typing import Any
 import numpy as np
 
 from repro.core.batched import optimize_batched
+from repro.core.engine import AllocEngine
 from repro.core.nvpax import AllocResult, NvpaxOptions, optimize
-from repro.core.problem import AllocProblem
+from repro.core.problem import AllocProblem, FleetTopology
 from repro.core.treeops import SlaTopo
 from repro.pdn.tree import FlatPDN
 
@@ -42,6 +52,9 @@ class ControllerConfig:
     # request headroom: caps are set slightly above measured power so jobs
     # can ramp between control steps (PRS-style reservation steering)
     request_margin: float = 1.05
+    # serve steps from the persistent compile-once engine (False = legacy
+    # rebuild-every-step host path, kept for A/B comparison)
+    use_engine: bool = True
 
 
 class PowerController:
@@ -58,6 +71,8 @@ class PowerController:
         self.priority = priority
         self.config = config or ControllerConfig()
         self._warm = None
+        self._engine: AllocEngine | None = None
+        self._topology: FleetTopology | None = None
         self.failed = np.zeros(pdn.n, dtype=bool)
         self.supply_scale = 1.0
         self.history: list[dict[str, Any]] = []
@@ -68,42 +83,74 @@ class PowerController:
         """Mark devices failed; they are excluded from allocation (pinned to
         zero power via a degenerate box) starting next control step."""
         self.failed[np.asarray(idx)] = True
-        self._warm = None  # geometry changed; cold-start the next solve
+        self._reset_solver_state()  # geometry changed; cold-start next solve
 
     def restore_devices(self, idx) -> None:
         self.failed[np.asarray(idx)] = False
-        self._warm = None
+        self._reset_solver_state()
 
     def set_supply_scale(self, scale: float) -> None:
         """Utility feed reduction (e.g. grid event): all node capacities are
-        scaled at problem-build time next step."""
+        scaled at problem-build time next step.  Capacities are engine
+        topology, so the pinned engine is rebuilt on the next step."""
         self.supply_scale = float(scale)
-        self._warm = None
+        self._reset_solver_state()
+        self._engine = None
+        self._topology = None
 
-    # -- problem construction (shared by step / step_batched) --------------
+    def _reset_solver_state(self) -> None:
+        self._warm = None
+        if self._engine is not None:
+            self._engine.reset_warm()
+
+    # -- problem construction (shared by the legacy step paths) ------------
+
+    def _effective_pdn(self) -> FlatPDN:
+        if self.supply_scale == 1.0:
+            return self.pdn
+        return _dc.replace(
+            self.pdn, node_cap=self.pdn.node_cap * self.supply_scale
+        )
+
+    def _preprocess(self, telemetry: np.ndarray, active: np.ndarray | None):
+        """Controller-level request shaping: ramp margin + failure masking."""
+        requests = np.asarray(telemetry, dtype=np.float64) * self.config.request_margin
+        req = np.where(self.failed, 0.0, requests)
+        if active is not None:
+            active = np.asarray(active, bool) & ~self.failed
+        return req, active
+
+    def _get_topology(self) -> FleetTopology:
+        """Prebuilt device arrays for the legacy/batched build fast path."""
+        if self._topology is None:
+            self._topology = FleetTopology.from_pdn(
+                self._effective_pdn(), sla=self.sla
+            )
+        return self._topology
 
     def _build_problem(
         self, telemetry: np.ndarray, active: np.ndarray | None
     ) -> AllocProblem:
-        cfg = self.config
-        requests = np.asarray(telemetry, dtype=np.float64) * cfg.request_margin
-        req = np.where(self.failed, 0.0, requests)
-        if active is not None:
-            active = np.asarray(active, bool) & ~self.failed
-
-        pdn_eff = self.pdn
-        if self.supply_scale != 1.0:
-            pdn_eff = _dc.replace(
-                self.pdn, node_cap=self.pdn.node_cap * self.supply_scale
-            )
+        req, active = self._preprocess(telemetry, active)
         return AllocProblem.build(
-            pdn_eff,
+            self._effective_pdn(),
             req,
             active=active,
-            idle_threshold=cfg.idle_threshold,
-            sla=self.sla,
+            idle_threshold=self.config.idle_threshold,
             priority=self.priority,
+            topology=self._get_topology(),
         )
+
+    def _get_engine(self) -> AllocEngine:
+        if self._engine is None:
+            self._engine = AllocEngine(
+                self._effective_pdn(),
+                sla=self.sla,
+                priority=self.priority,
+                options=self.config.options,
+                idle_threshold=self.config.idle_threshold,
+            )
+        return self._engine
 
     # -- main loop ---------------------------------------------------------
 
@@ -120,6 +167,11 @@ class PowerController:
         feasible, so failed devices are pinned at l and reported unusable.
         """
         cfg = self.config
+        if cfg.use_engine:
+            req, act = self._preprocess(telemetry, active)
+            res = self._get_engine().step(req, active=act)
+            self.history.append(self._get_engine().history[-1])
+            return res
         ap = self._build_problem(telemetry, active)
         t0 = time.perf_counter()
         res = optimize(ap, cfg.options, warm=self._warm)
@@ -142,6 +194,7 @@ class PowerController:
         telemetry_batch: np.ndarray,
         *,
         active: np.ndarray | None = None,
+        carry_warm: bool = True,
     ):
         """Evaluate K candidate telemetry scenarios in ONE compiled program.
 
@@ -149,10 +202,17 @@ class PowerController:
         per-tenant perturbations, robustness samples); ``active`` is either
         ``[n]`` (shared job placement across scenarios) or ``[K, n]``.
 
-        This is a *what-if* API: it applies the same request pre-processing,
-        failure masking and supply scaling as :meth:`step` but does NOT
-        advance the controller's warm-start state or history — the caller
-        picks a scenario and then commits it with :meth:`step`.  Returns a
+        Applies the same request pre-processing, failure masking and supply
+        scaling as :meth:`step` but does NOT advance the controller's
+        allocation state or history.  With ``carry_warm`` (default), the
+        batched solver warm-start is carried across consecutive calls of the
+        same batch size — an iteration-count optimization that preserves
+        solution *quality* but, on tenant-SLA fleets, may pick a different
+        equal-quality vertex of the eps-degenerate max-min LPs (~1 W
+        per-device differences; Phase I, totals and feasibility are
+        unaffected).  Use :meth:`what_if` (``carry_warm=False``) when
+        call-to-call determinism matters, e.g. when ranking MPC candidates
+        across separate calls.  Returns a
         :class:`repro.core.batched.BatchedAllocResult` with ``[K, n]``
         feasible allocations.
         """
@@ -165,26 +225,33 @@ class PowerController:
         K, n = telemetry_batch.shape
         if active is not None:
             active = np.asarray(active, bool)
-            if active.shape == (n,):
-                act_rows = [active] * K
-            elif active.shape == (K, n):
-                act_rows = [active[k] for k in range(K)]
-            else:
+            if active.shape not in ((n,), (K, n)):
                 raise ValueError(
                     f"active must be [{n}] or [{K}, {n}], got {active.shape}"
                 )
-        else:
+        if self.config.use_engine:
+            req = np.where(self.failed, 0.0,
+                           telemetry_batch * self.config.request_margin)
+            if active is not None:
+                active = active & ~self.failed
+            return self._get_engine().step_batched(
+                req, active=active, carry_warm=carry_warm
+            )
+        if active is None:
             act_rows = [None] * K
+        elif active.shape == (n,):
+            act_rows = [active] * K
+        else:
+            act_rows = [active[k] for k in range(K)]
+        # the prebuilt topology is shared across scenarios, so per-scenario
+        # builds are telemetry-only and stacking skips the equality compare
         aps = [
             self._build_problem(telemetry_batch[k], act_rows[k]) for k in range(K)
-        ]
-        # all scenarios come from the same pdn_eff/sla: share scenario 0's
-        # topology arrays so stacking skips the per-leaf equality compare
-        aps = [aps[0]] + [
-            ap._replace(tree=aps[0].tree, sla=aps[0].sla) for ap in aps[1:]
         ]
         return optimize_batched(aps, self.config.options)
 
     def what_if(self, telemetry_batch: np.ndarray, **kw):
-        """Alias for :meth:`step_batched` (MPC / scenario-sweep reads)."""
+        """Strictly stateless :meth:`step_batched` (MPC / scenario-sweep
+        reads): no warm carry, so identical inputs give identical outputs."""
+        kw.setdefault("carry_warm", False)
         return self.step_batched(telemetry_batch, **kw)

@@ -45,7 +45,7 @@ class DatacenterSim:
         """Run ``steps`` control intervals; returns per-step metric arrays."""
         out: dict[str, list] = {
             "S_nvpax": [], "S_static": [], "S_greedy": [],
-            "wall_ms": [], "straggler_tax": [],
+            "wall_ms": [], "straggler_tax": [], "truncated": [],
         }
         for t in range(start, start + steps):
             power = self.trace.power(t)
@@ -63,6 +63,8 @@ class DatacenterSim:
             out["wall_ms"].append(
                 1000 * self.controller.history[-1]["wall_s"]
             )
+            # deadline/anytime mode (engine path reports it; host path too)
+            out["truncated"].append(bool(res.stats.get("truncated", False)))
             rep = straggler_report(res.allocation, self.trace.job_of,
                                    self.dvfs)
             out["straggler_tax"].append(rep["mean_tax"])

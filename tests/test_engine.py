@@ -1,0 +1,338 @@
+"""Persistent allocation engine (:mod:`repro.core.engine`): zero-rebuild
+steps match the rebuild-every-step path, warm-start carry semantics, and the
+batched deadline/iteration-budget mode.
+
+The engine runs the SAME traced program as the batched path
+(``solve_three_phase``) over the same problem builders as the host driver,
+so engine-served steps must match the legacy ``PowerController.step``
+(``AllocProblem.build`` + ``optimize`` every interval) to 1e-9 W — observed
+deviation is ~1e-12.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.batched import optimize_batched
+from repro.core.engine import AllocEngine
+from repro.core.nvpax import NvpaxOptions, optimize
+from repro.core.problem import AllocProblem, FleetTopology
+from repro.pdn.tenants import assign_tenants
+from repro.pdn.tree import build_from_level_sizes
+from repro.power.controller import ControllerConfig, PowerController
+
+ATOL = 1e-9  # engine vs rebuild path: structurally identical programs
+
+
+@pytest.fixture(scope="module")
+def pdn():
+    return build_from_level_sizes([2, 3, 2], gpus_per_server=4)  # n = 48
+
+
+@pytest.fixture(scope="module")
+def sla_fleet(pdn):
+    layout = assign_tenants(pdn, n_tenants=4, devices_per_tenant=8, seed=1)
+    return layout, layout.sla_topo()
+
+
+def _tree_feasible(pdn, x, tol=1e-6):
+    csum = np.concatenate([[0.0], np.cumsum(x)])
+    sums = csum[pdn.node_end] - csum[pdn.node_start]
+    return (sums <= pdn.node_cap + tol).all()
+
+
+# ---------------------------------------------------------------------------
+# engine == rebuild path
+# ---------------------------------------------------------------------------
+
+
+def test_engine_step_matches_rebuild_path(pdn):
+    """Warm-carried engine steps match warm-carried build+optimize steps to
+    1e-9 W on randomized telemetry."""
+    rng = np.random.default_rng(0)
+    eng = AllocEngine(pdn)
+    warm = None
+    for t in range(3):
+        tele = rng.uniform(50, 650, pdn.n)
+        res_e = eng.step(tele)
+        res_h = optimize(AllocProblem.build(pdn, tele), warm=warm)
+        warm = res_h.warm_state
+        np.testing.assert_allclose(
+            res_e.allocation, res_h.allocation, atol=ATOL,
+            err_msg=f"step {t}",
+        )
+        assert res_e.stats["total_iterations"] == res_h.stats["total_iterations"]
+        assert _tree_feasible(pdn, res_e.allocation)
+
+
+def test_engine_step_matches_rebuild_path_sla(pdn, sla_fleet):
+    """Same, on a tenant-SLA fleet with mixed priorities (iterated-LP
+    max-min phases, multi-level Phase I sweep)."""
+    layout, sla = sla_fleet
+    rng = np.random.default_rng(1)
+    eng = AllocEngine(pdn, sla=sla, priority=layout.priority)
+    warm = None
+    for t in range(2):
+        tele = rng.uniform(100, 650, pdn.n)
+        res_e = eng.step(tele)
+        res_h = optimize(
+            AllocProblem.build(pdn, tele, sla=sla, priority=layout.priority),
+            warm=warm,
+        )
+        warm = res_h.warm_state
+        np.testing.assert_allclose(
+            res_e.allocation, res_h.allocation, atol=ATOL,
+            err_msg=f"step {t}",
+        )
+
+
+def test_engine_pinned_levels_skip_empty(pdn):
+    """The engine pins priority levels from the full layout at construction;
+    a level with no active devices is skipped by the traced cond, matching
+    the host driver's active-only sweep without recompiling."""
+    priority = np.where(np.arange(pdn.n) % 2 == 0, 2, 1).astype(np.int32)
+    eng = AllocEngine(pdn, priority=priority)
+    assert eng.meta.levels == (2, 1)
+    rng = np.random.default_rng(2)
+    tele = rng.uniform(200, 650, pdn.n)
+    tele[priority == 2] = 50.0  # all priority-2 devices idle
+    res_e = eng.step(tele)
+    res_h = optimize(AllocProblem.build(pdn, tele, priority=priority))
+    np.testing.assert_allclose(res_e.allocation, res_h.allocation, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# warm-start carry
+# ---------------------------------------------------------------------------
+
+
+def test_warm_carry_matches_cold_host_and_engine(pdn):
+    """Warm-start is an optimization, not semantics: on tree-only fleets
+    (unique optimum) warm-carried and cold steps agree tightly, host and
+    engine paths alike."""
+    rng = np.random.default_rng(3)
+    tele0 = rng.uniform(100, 600, pdn.n)
+    tele1 = np.clip(tele0 + rng.normal(0, 20, pdn.n), 60, 690)
+
+    r0 = optimize(AllocProblem.build(pdn, tele0))
+    ap1 = AllocProblem.build(pdn, tele1)
+    cold = optimize(ap1)
+    warm = optimize(ap1, warm=r0.warm_state)
+    np.testing.assert_allclose(warm.allocation, cold.allocation, atol=1e-6)
+
+    eng = AllocEngine(pdn)
+    eng.step(tele0)
+    warm_e = eng.step(tele1)  # warm-carried
+    eng.reset_warm()
+    cold_e = eng.step(tele1)
+    np.testing.assert_allclose(warm_e.allocation, cold_e.allocation, atol=1e-6)
+
+
+def test_warm_carry_equivalent_quality_sla(pdn, sla_fleet):
+    """On SLA fleets the max-min LPs are degenerate (eps tie-breaking), so
+    warm and cold may pick different equal-quality vertices: assert Phase I
+    equality, feasibility, and identical total allocated power instead of
+    per-device equality."""
+    layout, sla = sla_fleet
+    rng = np.random.default_rng(4)
+    tele0 = rng.uniform(100, 650, pdn.n)
+    tele1 = tele0 * 1.01
+    r0 = optimize(AllocProblem.build(pdn, tele0, sla=sla, priority=layout.priority))
+    ap1 = AllocProblem.build(pdn, tele1, sla=sla, priority=layout.priority)
+    cold = optimize(ap1)
+    warm = optimize(ap1, warm=r0.warm_state)
+    assert warm.stats["converged"] and cold.stats["converged"]
+    np.testing.assert_allclose(warm.phase1, cold.phase1, atol=1e-6)
+    assert _tree_feasible(pdn, warm.allocation)
+    assert abs(warm.allocation.sum() - cold.allocation.sum()) < 1e-3
+
+
+def test_batched_warm_carry_reduces_iterations(pdn, sla_fleet):
+    """Carrying the batched per-phase warm state across consecutive control
+    steps reduces mean solver iterations on drifting telemetry."""
+    layout, sla = sla_fleet
+    rng = np.random.default_rng(5)
+    tb0 = rng.uniform(100, 650, (3, pdn.n))
+    tb1 = tb0 * 1.005
+
+    eng = AllocEngine(pdn, sla=sla, priority=layout.priority)
+    eng.step_batched(tb0)  # primes the warm carry
+    warm_res = eng.step_batched(tb1)
+
+    eng_cold = AllocEngine(pdn, sla=sla, priority=layout.priority)
+    cold_res = eng_cold.step_batched(tb1)
+
+    warm_iters = warm_res.stats["iterations"].mean()
+    cold_iters = cold_res.stats["iterations"].mean()
+    assert warm_iters < cold_iters, (warm_iters, cold_iters)
+    assert warm_res.stats["converged"].all()
+    for k in range(3):
+        assert _tree_feasible(pdn, warm_res.allocation[k])
+
+
+def test_host_warm_carry_reduces_iterations(pdn, sla_fleet):
+    """Host-path per-phase carry (phases.WarmCarry) cuts iterations too."""
+    layout, sla = sla_fleet
+    rng = np.random.default_rng(6)
+    tele0 = rng.uniform(100, 650, pdn.n)
+    r0 = optimize(AllocProblem.build(pdn, tele0, sla=sla, priority=layout.priority))
+    ap1 = AllocProblem.build(
+        pdn, tele0 * 1.01, sla=sla, priority=layout.priority
+    )
+    cold = optimize(ap1)
+    warm = optimize(ap1, warm=r0.warm_state)
+    assert warm.stats["total_iterations"] < cold.stats["total_iterations"]
+
+
+# ---------------------------------------------------------------------------
+# deadline / iteration-budget mode
+# ---------------------------------------------------------------------------
+
+
+def test_batched_iter_budget_truncates_to_phase1(pdn, sla_fleet):
+    """Budget 1: refinement phases are skipped, allocation == Phase I output
+    (still feasible), stats['truncated'] set — the host path's zero-deadline
+    semantics."""
+    layout, sla = sla_fleet
+    rng = np.random.default_rng(7)
+    aps = [
+        AllocProblem.build(pdn, r, sla=sla, priority=layout.priority)
+        for r in rng.uniform(100, 650, (2, pdn.n))
+    ]
+    res = optimize_batched(aps, iter_budget=1)
+    assert res.stats["truncated"].all()
+    np.testing.assert_allclose(res.allocation, res.phase1, atol=0)
+    for k in range(2):
+        assert _tree_feasible(pdn, res.allocation[k])
+
+
+def test_batched_iter_budget_large_matches_unbudgeted(pdn, sla_fleet):
+    layout, sla = sla_fleet
+    rng = np.random.default_rng(8)
+    aps = [
+        AllocProblem.build(pdn, r, sla=sla, priority=layout.priority)
+        for r in rng.uniform(100, 650, (2, pdn.n))
+    ]
+    full = optimize_batched(aps)
+    budgeted = optimize_batched(aps, iter_budget=10**8)
+    assert not budgeted.stats["truncated"].any()
+    np.testing.assert_allclose(budgeted.allocation, full.allocation, atol=ATOL)
+
+
+def test_batched_deadline_s_honored(pdn, sla_fleet):
+    """options.deadline_s drives the calibrated iteration budget: a tiny
+    deadline truncates, a generous one does not (was silently ignored)."""
+    layout, sla = sla_fleet
+    rng = np.random.default_rng(9)
+    aps = [
+        AllocProblem.build(pdn, r, sla=sla, priority=layout.priority)
+        for r in rng.uniform(100, 650, (2, pdn.n))
+    ]
+    tiny = optimize_batched(aps, NvpaxOptions(deadline_s=1e-7))
+    assert tiny.stats["truncated"].all()
+    assert tiny.stats["iter_budget"] is not None
+    roomy = optimize_batched(aps, NvpaxOptions(deadline_s=600.0))
+    assert not roomy.stats["truncated"].any()
+
+
+def test_engine_step_deadline(pdn, sla_fleet):
+    layout, sla = sla_fleet
+    rng = np.random.default_rng(10)
+    eng = AllocEngine(pdn, sla=sla, priority=layout.priority)
+    tele = rng.uniform(100, 650, pdn.n)
+    res = eng.step(tele, deadline_s=1e-7)
+    assert res.stats["truncated"]
+    np.testing.assert_allclose(res.allocation, res.phase1, atol=0)
+    res2 = eng.step(tele, deadline_s=600.0)
+    assert not res2.stats["truncated"]
+
+
+# ---------------------------------------------------------------------------
+# FleetTopology build fast path
+# ---------------------------------------------------------------------------
+
+
+def test_build_with_prebuilt_topology_matches(pdn, sla_fleet):
+    layout, sla = sla_fleet
+    topo = FleetTopology.from_pdn(pdn, sla=sla)
+    rng = np.random.default_rng(11)
+    tele = rng.uniform(50, 650, pdn.n)
+    a = AllocProblem.build(pdn, tele, sla=sla, priority=layout.priority)
+    b = AllocProblem.build(pdn, tele, priority=layout.priority, topology=topo)
+    for leaf in ("l", "u", "r", "priority", "active", "weight_scale"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, leaf)), np.asarray(getattr(b, leaf)), leaf
+        )
+    np.testing.assert_array_equal(np.asarray(a.tree.cap), np.asarray(b.tree.cap))
+    np.testing.assert_array_equal(np.asarray(a.sla.hi), np.asarray(b.sla.hi))
+    with pytest.raises(ValueError):
+        AllocProblem.build(pdn, tele, sla=sla, topology=topo)
+
+
+# ---------------------------------------------------------------------------
+# controller on the engine
+# ---------------------------------------------------------------------------
+
+
+def test_controller_engine_matches_legacy(pdn):
+    """Engine-served PowerController.step == legacy rebuild-every-step
+    controller to 1e-9 W, including across a device-failure event."""
+    ctl_e = PowerController(pdn, config=ControllerConfig(use_engine=True))
+    ctl_l = PowerController(pdn, config=ControllerConfig(use_engine=False))
+    rng = np.random.default_rng(12)
+    for t in range(4):
+        if t == 2:
+            ctl_e.fail_devices([3, 17])
+            ctl_l.fail_devices([3, 17])
+        tele = rng.uniform(50, 650, pdn.n)
+        res_e = ctl_e.step(tele)
+        res_l = ctl_l.step(tele)
+        np.testing.assert_allclose(
+            res_e.allocation, res_l.allocation, atol=ATOL, err_msg=f"step {t}"
+        )
+    assert len(ctl_e.history) == len(ctl_l.history) == 4
+
+
+def test_controller_step_batched_engine_path(pdn):
+    """Engine-backed what-if: no history advance, feasible output, warm
+    carried across calls of the same batch size."""
+    ctl = PowerController(pdn)
+    rng = np.random.default_rng(13)
+    tele = rng.uniform(100, 600, (3, pdn.n))
+    res = ctl.step_batched(tele)
+    assert res.allocation.shape == (3, pdn.n)
+    assert len(ctl.history) == 0
+    assert 3 in ctl._engine._batched_warm  # warm carried for K=3
+    res2 = ctl.step_batched(tele * 1.002)
+    assert res2.stats["iterations"].mean() <= res.stats["iterations"].mean()
+    for k in range(3):
+        assert _tree_feasible(pdn, res2.allocation[k])
+
+
+def test_what_if_is_stateless_and_deterministic(pdn, sla_fleet):
+    """what_if never carries warm state: identical inputs -> identical
+    outputs, even on SLA fleets where warm carry could pick a different
+    equal-quality max-min vertex."""
+    layout, sla = sla_fleet
+    ctl = PowerController(pdn, sla=sla, priority=layout.priority)
+    rng = np.random.default_rng(15)
+    tele = rng.uniform(100, 650, (2, pdn.n))
+    a = ctl.what_if(tele)
+    assert not ctl._engine._batched_warm  # nothing stored
+    b = ctl.what_if(tele)
+    np.testing.assert_array_equal(a.allocation, b.allocation)
+
+
+def test_controller_supply_scale_rebuilds_engine(pdn):
+    ctl = PowerController(pdn)
+    rng = np.random.default_rng(14)
+    tele = rng.uniform(200, 650, pdn.n)
+    ctl.step(tele)
+    eng_before = ctl._engine
+    ctl.set_supply_scale(0.8)
+    res = ctl.step(tele)
+    assert ctl._engine is not eng_before  # capacities are engine topology
+    csum = np.concatenate([[0.0], np.cumsum(res.allocation)])
+    sums = csum[pdn.node_end] - csum[pdn.node_start]
+    assert (sums <= 0.8 * pdn.node_cap + 1e-6).all()

@@ -57,6 +57,29 @@ def test_dual_prox_sweep(n, dtype):
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6, atol=1e-6)
 
 
+def test_pdhg_solve_pallas_parity():
+    """pdhg.solve with the fused Pallas update kernels (interpret mode on
+    CPU) matches the pure-jnp inner iteration: same iterate path, same
+    iteration count, allocations to solver tolerance."""
+    from repro.core import pdhg
+    from repro.core.nvpax import NvpaxOptions, optimize
+    from repro.core.problem import AllocProblem
+    from repro.pdn.tenants import assign_tenants
+
+    pdn = build_from_level_sizes([2, 3, 2], gpus_per_server=4)
+    layout = assign_tenants(pdn, n_tenants=4, devices_per_tenant=8, seed=1)
+    tele = np.random.default_rng(3).uniform(100, 650, pdn.n)
+    ap = AllocProblem.build(
+        pdn, tele, sla=layout.sla_topo(), priority=layout.priority
+    )
+    ref = optimize(ap)
+    pal = optimize(
+        ap, NvpaxOptions(solver=pdhg.SolverOptions(use_pallas=True))
+    )
+    np.testing.assert_allclose(pal.allocation, ref.allocation, atol=1e-9)
+    assert pal.stats["total_iterations"] == ref.stats["total_iterations"]
+
+
 # ---------------------------------------------------------------------------
 # tree_matvec
 # ---------------------------------------------------------------------------
