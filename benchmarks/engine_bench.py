@@ -79,11 +79,12 @@ def bench_fleet(n: int, steps: int = 6, K: int = 8, seed: int = 0) -> dict:
     engine.reset_warm()
     engine.step(teles[0])
     engine.step(teles[0])
-    engine_ms, max_dev = [], 0.0
+    engine_ms, phase_iters, max_dev = [], [], 0.0
     for t in range(1, steps + 1):
         t0 = time.perf_counter()
         res_e = engine.step(teles[t])
         engine_ms.append(1000 * (time.perf_counter() - t0))
+        phase_iters.append(res_e.stats["phase_iterations"])
         max_dev = max(
             max_dev, float(np.abs(res_e.allocation - rebuild_alloc[t - 1]).max())
         )
@@ -107,6 +108,12 @@ def bench_fleet(n: int, steps: int = 6, K: int = 8, seed: int = 0) -> dict:
         "engine_ms_mean": engine_mean,
         "engine_speedup": rebuild_mean / engine_mean,
         "engine_rebuild_max_dev_W": max_dev,
+        # per-phase PDHG iteration split (steady-state mean): groundwork for
+        # the ROADMAP's per-phase deadline-calibration item — the current
+        # deadline budget assumes a uniform per-iteration cost across phases
+        "phase_iterations_mean": [
+            float(x) for x in np.mean(phase_iters, axis=0)
+        ],
         "batched_K": K,
         "batched_ms": 1000 * batched_s,
         "batched_solves_per_s": K / batched_s,

@@ -23,6 +23,7 @@ def main() -> None:
     from benchmarks import (
         ablation_oversub,
         engine_bench,
+        fleet_bench,
         kernel_bench,
         nonuniform,
         roofline,
@@ -40,6 +41,14 @@ def main() -> None:
             lambda: engine_bench.run(
                 ns=(512, 2048, 12288) if args.full else (512, 2048),
                 steps=6 if args.full else 4,
+            ),
+        ),
+        # multi-domain fleet orchestrator: dispatch perf + parity, brownout
+        # coordination, churn re-pins (also standalone: fleet_bench.py)
+        (
+            "BENCH_fleet",
+            lambda: fleet_bench.run(
+                fleet_bench.GEOMETRIES["full" if args.full else "default"]
             ),
         ),
         ("nonuniform_appendix_a", lambda: nonuniform.run()),
@@ -93,6 +102,15 @@ def main() -> None:
                 f"dev {row['engine_rebuild_max_dev_W']:.1e} W)"
                 for row in r["fleets"]
             ) + f" | 5x@512: {r['meets_5x_at_512']}",
+            "BENCH_fleet": lambda r: (
+                f"n={r['perf']['n_devices']} K={r['perf']['n_domains']}: "
+                f"stacked {r['perf']['fleet_stacked_ms_mean']:.1f}ms vs mono "
+                f"{r['perf']['mono_engine_ms_mean']:.1f}ms, parity "
+                f"{r['perf']['parity_total_dev_W']:.1e} W | brownout S "
+                f"{r['brownout']['S_fleet_mean']:.3f} vs static "
+                f"{r['brownout']['S_static_mean']:.3f} | churn retraces "
+                f"{r['churn']['fleet_retraces']}"
+            ),
             "nonuniform_appendix_a": lambda r: (
                 f"S_nvpax={r['S_nvpax']:.2f}% (paper 83.26) "
                 f"S_greedy={r['S_greedy']:.2f}% (paper 73.94)"

@@ -392,6 +392,12 @@ def solve_three_phase(
     stats = {
         "solves": p1.solves + p2.solves + p3.solves,
         "iterations": p1.iterations + p2.iterations + p3.iterations,
+        # per-phase PDHG iteration split: groundwork for a per-phase deadline
+        # cost model (the uniform per-iteration estimate errs when phase
+        # mixes shift; see ROADMAP deadline-calibration item)
+        "iterations_p1": p1.iterations,
+        "iterations_p2": p2.iterations,
+        "iterations_p3": p3.iterations,
         "converged": p1.converged & p2.converged & p3.converged,
         "truncated": truncated,
     }
@@ -535,6 +541,10 @@ def optimize_batched(
         stats={
             "solves": np.asarray(stats["solves"]),
             "iterations": np.asarray(stats["iterations"]),
+            "iterations_per_phase": np.stack(
+                [np.asarray(stats[f"iterations_p{i}"]) for i in (1, 2, 3)],
+                axis=-1,
+            ),
             "converged": np.asarray(stats["converged"]),
             "truncated": np.asarray(stats["truncated"]),
             "iter_budget": iter_budget,

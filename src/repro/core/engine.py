@@ -29,10 +29,15 @@ rebuild work:
   phase-boundary anytime semantics (``stats["truncated"]``) as the
   wall-clock host path.
 
-The engine is topology-pinned: device failures / request changes are
-ordinary telemetry, but capacity changes (e.g. a supply drop rescaling node
-caps) need a new engine.  :class:`repro.power.PowerController` manages that
-lifecycle.
+The engine is *shape*-pinned, not *value*-pinned: the fleet topology enters
+the compiled program as traced arrays, so any same-shape change — a supply
+drop rescaling node caps (:meth:`rescale_supply`), a per-step budget grant
+from the fleet coordinator (:meth:`set_root_cap`), device box changes on
+churn (:meth:`repin`) — swaps arrays on the pinned executable without
+recompiling (asserted via :func:`trace_count` in ``tests/test_fleet.py``).
+Only shape/static-metadata changes (device count, priority level set) need a
+new engine.  :class:`repro.power.PowerController` and
+:class:`repro.fleet.FleetOrchestrator` manage that lifecycle.
 """
 
 from __future__ import annotations
@@ -57,11 +62,22 @@ from repro.core.batched import (
 from repro.core.nvpax import AllocResult, NvpaxOptions
 from repro.core.problem import AllocProblem, FleetTopology
 from repro.core.treeops import SlaTopo
-from repro.pdn.tree import FlatPDN
+from repro.pdn.tree import FlatPDN, check_caps_fund_minimums
 
-__all__ = ["AllocEngine"]
+__all__ = ["AllocEngine", "trace_count"]
 
 _UNSET = object()
+
+# Incremented each time the engine step program is (re)traced, i.e. once per
+# compiled variant.  Lifecycle tests assert re-pins (cap/box swaps) leave it
+# unchanged while shape changes advance it.
+_N_TRACES = 0
+
+
+def trace_count() -> int:
+    """Number of times the engine step program has been traced (compiled)
+    in this process.  Monotone; compare deltas, not absolute values."""
+    return _N_TRACES
 
 
 def _shape_requests(r, active, l, u):
@@ -74,6 +90,8 @@ def _shape_requests(r, active, l, u):
 def _engine_solve(fleet, r, priority, active, warm, iter_budget, *, meta, opts):
     """The whole control step as one traced program: request pre-processing
     (paper section 5.2) + three-phase solve + exact feasibility repair."""
+    global _N_TRACES
+    _N_TRACES += 1  # executes at trace time only (side effect outside jnp ops)
     r = _shape_requests(r, active, fleet.l, fleet.u)
     ap = AllocProblem(
         l=fleet.l,
@@ -150,6 +168,13 @@ class AllocEngine:
             run_phase3=self.options.run_phase3,
             eps=self.options.eps,
         )
+        # construction-time caps: rescale_supply scales are absolute vs these
+        self._node_cap0 = np.asarray(pdn.node_cap, np.float64).copy()
+        # host mirrors of the current pinned caps and per-node subtree
+        # minimum draws, so the per-step set_root_cap fast path needs no
+        # device readback and no O(n) revalidation (repin keeps them fresh)
+        self._node_cap_np = self._node_cap0.copy()
+        self._subtree_lmin = pdn.subtree_min_power()
         self._warm: phases.WarmCarry | None = None
         self._batched_warm: dict[int, Any] = {}
         self._iter_cost_s: float | None = None
@@ -166,6 +191,95 @@ class AllocEngine:
         """Drop carried solver state (next step/step_batched cold-starts)."""
         self._warm = None
         self._batched_warm.clear()
+
+    # -- in-place topology re-pin (no recompile) ---------------------------
+
+    def repin(
+        self,
+        *,
+        dev_l: np.ndarray | None = None,
+        dev_u: np.ndarray | None = None,
+        node_cap: np.ndarray | None = None,
+        reset_warm: bool = True,
+    ) -> None:
+        """Swap same-shape topology arrays on the pinned compiled program.
+
+        The fleet topology is a *traced* argument of the engine step, so
+        replacing device boxes or node capacities re-pins the engine without
+        recompiling — the cheap path for supply-scale changes, coordinator
+        budget grants, and device join/leave (a left device gets a
+        zero-width ``[0, 0]`` box).  Shape or static-metadata changes still
+        need a new engine.  Feasibility (caps >= subtree minimum draw) is
+        revalidated on the host.  ``reset_warm`` drops carried duals — keep
+        it for geometry changes; per-step budget grants may carry
+        (``reset_warm=False``).
+        """
+        fleet = self.fleet
+        with self._ctx():
+            if node_cap is not None:
+                node_cap = np.asarray(node_cap, np.float64)
+                if node_cap.shape != (self.pdn.m,):
+                    raise ValueError(
+                        f"node_cap shape {node_cap.shape} != ({self.pdn.m},)"
+                    )
+                fleet = fleet._replace(
+                    tree=fleet.tree._replace(cap=jnp.asarray(node_cap, self.dtype))
+                )
+            if dev_l is not None:
+                dev_l = np.asarray(dev_l, np.float64)
+                if dev_l.shape != (self.n,):
+                    raise ValueError(f"dev_l shape {dev_l.shape} != ({self.n},)")
+                fleet = fleet._replace(l=jnp.asarray(dev_l, self.dtype))
+            if dev_u is not None:
+                dev_u = np.asarray(dev_u, np.float64)
+                if dev_u.shape != (self.n,):
+                    raise ValueError(f"dev_u shape {dev_u.shape} != ({self.n},)")
+                fleet = fleet._replace(u=jnp.asarray(dev_u, self.dtype))
+        l_np = np.asarray(fleet.l, np.float64)
+        u_np = np.asarray(fleet.u, np.float64)
+        if (l_np < 0).any() or (l_np > u_np + 1e-12).any():
+            raise ValueError("device limits must satisfy 0 <= l <= u")
+        cap_np = np.asarray(fleet.tree.cap, np.float64)
+        lmin = check_caps_fund_minimums(
+            self.pdn.node_start, self.pdn.node_end, cap_np, l_np,
+            what="re-pinned node",
+        )
+        self.fleet = fleet
+        self._node_cap_np = cap_np
+        self._subtree_lmin = lmin
+        if reset_warm:
+            self.reset_warm()
+
+    def set_root_cap(self, cap: float, *, reset_warm: bool = False) -> None:
+        """Re-pin only the root node's capacity — the coordinator's per-step
+        budget grant in fleet mode.  Carries warm state by default (the
+        solver duals track the drifting budget well).
+
+        This is on the fleet orchestrator's per-step hot path, so it skips
+        :meth:`repin`'s full O(n + m) revalidation: only the root row can
+        change, and the cached subtree minimum bounds it from below.
+        """
+        cap = float(cap)
+        if cap < self._subtree_lmin[0] - 1e-9:
+            raise ValueError(
+                f"root cap {cap:.1f} W < sum of device minimums "
+                f"{self._subtree_lmin[0]:.1f} W"
+            )
+        self._node_cap_np = self._node_cap_np.copy()
+        self._node_cap_np[0] = cap
+        with self._ctx():
+            self.fleet = self.fleet._replace(
+                tree=self.fleet.tree._replace(
+                    cap=jnp.asarray(self._node_cap_np, self.dtype)
+                )
+            )
+        if reset_warm:
+            self.reset_warm()
+
+    def rescale_supply(self, scale: float, *, reset_warm: bool = True) -> None:
+        """Scale all node capacities to ``scale`` x their construction-time
+        values (absolute, not compounding) on the pinned program."""
+        self.repin(node_cap=self._node_cap0 * float(scale), reset_warm=reset_warm)
 
     # -- host-side request pre-processing (numpy, O(n)) --------------------
 
@@ -259,6 +373,9 @@ class AllocEngine:
             stats={
                 "total_solves": int(stats["solves"]),
                 "total_iterations": int(stats["iterations"]),
+                "phase_iterations": [
+                    int(stats[f"iterations_p{i}"]) for i in (1, 2, 3)
+                ],
                 "converged": bool(stats["converged"]),
                 "truncated": bool(stats["truncated"]),
                 "iter_budget": budget,
@@ -270,6 +387,7 @@ class AllocEngine:
                 "converged": res.stats["converged"],
                 "solves": res.stats["total_solves"],
                 "iterations": res.stats["total_iterations"],
+                "phase_iterations": res.stats["phase_iterations"],
                 "truncated": res.stats["truncated"],
             }
         )

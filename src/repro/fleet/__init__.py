@@ -1,0 +1,31 @@
+"""repro.fleet — multi-domain fleet orchestration (ISSUE 3).
+
+The fleet layer shards the monolithic allocator into per-power-domain
+engines coordinated by an inter-domain budget planner:
+
+* :mod:`repro.fleet.partition` — cut the PDN tree at a level into K
+  independent domains + the coordinator tree above the cut;
+* :mod:`repro.fleet.coordinator` — rebalance the global supply across
+  domains between steps (waterfill over the coordinator tree);
+* :mod:`repro.fleet.orchestrator` — per-domain engines served as one
+  stacked/vmapped dispatch (homogeneous domains) or a compiled-engine
+  loop, with per-domain warm carry;
+* :mod:`repro.fleet.lifecycle` — churn-tolerant re-pins (device
+  join/leave, supply derating) and double-buffered telemetry ingestion.
+"""
+
+from repro.fleet.coordinator import BudgetCoordinator
+from repro.fleet.lifecycle import FleetLifecycle, TelemetryDoubleBuffer
+from repro.fleet.orchestrator import FleetOrchestrator, FleetStepResult
+from repro.fleet.partition import DomainSpec, FleetPartition, split_pdn
+
+__all__ = [
+    "BudgetCoordinator",
+    "DomainSpec",
+    "FleetLifecycle",
+    "FleetOrchestrator",
+    "FleetPartition",
+    "FleetStepResult",
+    "TelemetryDoubleBuffer",
+    "split_pdn",
+]

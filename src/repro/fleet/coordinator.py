@@ -1,0 +1,142 @@
+"""Inter-domain budget coordination: the upper level of the two-level solve.
+
+Between control steps the coordinator redistributes the global supply
+across power domains from their aggregate demands — a hot domain borrows
+headroom a cold domain is not using (CloudPowerCap's partition-budget
+redistribution, arXiv:1403.1289, and the per-domain operation of
+fleet-scale capping in arXiv:2010.15388).  The feasible set is exactly the
+coordinator tree from :mod:`repro.fleet.partition`: per-domain grant boxes
+``[min_draw_k, cap_k]`` plus every above-the-cut capacity row.  That is the
+same box + tree geometry as the device-level max-min phases, so we reuse
+:func:`repro.core.waterfill.waterfill_arrays` verbatim — domains are the
+"devices" of a miniature allocation problem.
+
+Two sweeps per plan:
+
+1. *demand pass* — raise grants max-min fairly toward
+   ``min(demand_k, cap_k)``: under global shortage, demand is satisfied
+   progressively (small demands fully, large demands capped at the uniform
+   water level) instead of proportionally starving small domains;
+2. *headroom pass* — distribute whatever supply remains up to each
+   domain's own capacity, so per-domain engines keep the paper's
+   surplus-redistribution behavior (Phases II/III raise allocations beyond
+   requests) and an under-forecast demand spike inside a domain is absorbed
+   locally without waiting a coordinator round.
+
+When nothing above the cut binds (``sum(cap_k)`` within every ancestor
+cap), the headroom pass raises every grant to ``cap_k`` — each domain gets
+its full subtree budget and the fleet solve is exactly the monolithic
+solve (parity asserted in ``tests/test_fleet.py``).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.waterfill import waterfill_arrays
+from repro.fleet.partition import FleetPartition
+from repro.pdn.tree import check_caps_fund_minimums
+
+__all__ = ["BudgetCoordinator"]
+
+_MODES = ("waterfill", "subtree", "static")
+
+
+class BudgetCoordinator:
+    """Plans per-domain budget grants from per-domain aggregate demand.
+
+    Modes:
+
+    * ``"waterfill"`` (default) — demand pass + headroom pass (see module
+      docstring); the production policy.
+    * ``"subtree"`` — demand-oblivious: every domain gets its own subtree
+      capacity, clipped by the ancestors (headroom pass only).  Matches the
+      monolithic solve when nothing above the cut binds.
+    * ``"static"`` — equal per-device share of the root feed (the paper's
+      Static baseline lifted to domain granularity), clipped to domain
+      capacity and ancestor caps.  Benchmark baseline, not a policy.
+    """
+
+    def __init__(self, partition: FleetPartition, mode: str = "waterfill"):
+        if mode not in _MODES:
+            raise ValueError(f"mode must be one of {_MODES}, got {mode!r}")
+        self.mode = mode
+        self.k = partition.k
+        self.start = partition.coord_start.copy()
+        self.end = partition.coord_end.copy()
+        self.cap = partition.coord_cap.copy()
+        self.domain_cap = partition.domain_cap
+        # grants below the subtree minimum draw would make the domain's own
+        # problem infeasible; the partition's PDN validation guarantees the
+        # coordinator tree can fund all minimums simultaneously
+        self.domain_min = np.array(
+            [d.pdn.subtree_min_power()[0] for d in partition.domains]
+        )
+        self.domain_n = np.array([d.n for d in partition.domains], np.int64)
+
+    def _fill(self, base: np.ndarray, u: np.ndarray, cap: np.ndarray) -> np.ndarray:
+        return waterfill_arrays(
+            self.start, self.end, cap, u, base, np.ones(self.k, bool)
+        )
+
+    def plan(
+        self,
+        demand: np.ndarray,
+        *,
+        domain_cap: np.ndarray | None = None,
+        coord_cap: np.ndarray | None = None,
+        domain_min: np.ndarray | None = None,
+        domain_n: np.ndarray | None = None,
+    ) -> np.ndarray:
+        """[K] aggregate demand (watts) -> [K] budget grants (watts).
+
+        ``domain_cap``/``coord_cap`` override the partition-time capacities
+        (brownout: a domain feed or the utility feed derated this step);
+        ``domain_min`` overrides the per-domain minimum draw and
+        ``domain_n`` the per-domain device counts (device churn or a domain
+        rebuild changed them).  Grants always satisfy
+        ``min_k <= grant_k <= cap_k`` and every coordinator-tree row.
+        """
+        demand = np.asarray(demand, np.float64)
+        if demand.shape != (self.k,):
+            raise ValueError(f"demand shape {demand.shape} != ({self.k},)")
+        dcap = self.domain_cap if domain_cap is None else np.asarray(domain_cap)
+        ccap = self.cap if coord_cap is None else np.asarray(coord_cap)
+        dmin = self.domain_min if domain_min is None else np.asarray(domain_min)
+        if (dmin > dcap + 1e-9).any():
+            k = int(np.nonzero(dmin > dcap + 1e-9)[0][0])
+            raise ValueError(
+                f"domain {k} minimum draw {dmin[k]:.1f} W exceeds its "
+                f"(possibly derated) capacity {dcap[k]:.1f} W; mask devices "
+                "out first (FleetLifecycle.device_leave)"
+            )
+        # the floor itself must fit under every coordinator row, else the
+        # waterfill would return grants that silently violate the feed
+        check_caps_fund_minimums(
+            self.start, self.end, ccap, dmin, what="coordinator row"
+        )
+        grants = dmin.copy()
+        if self.mode == "waterfill":
+            grants = self._fill(grants, np.clip(demand, dmin, dcap), ccap)
+        elif self.mode == "static":
+            dn = self.domain_n if domain_n is None else np.asarray(domain_n)
+            share = ccap[0] / max(int(dn.sum()), 1)
+            grants = self._fill(grants, np.clip(share * dn, dmin, dcap), ccap)
+            return grants  # static never redistributes leftover headroom
+        # headroom pass (waterfill + subtree modes)
+        grants = self._fill(grants, dcap, ccap)
+        return grants
+
+    def check(self, grants: np.ndarray, coord_cap: np.ndarray | None = None,
+              tol: float = 1e-6) -> None:
+        """Assert grants respect every above-the-cut capacity row."""
+        ccap = self.cap if coord_cap is None else np.asarray(coord_cap)
+        csum = np.concatenate([[0.0], np.cumsum(grants)])
+        sums = csum[self.end] - csum[self.start]
+        bad = np.nonzero(sums > ccap + tol)[0]
+        if bad.size:
+            a = int(bad[0])
+            raise AssertionError(
+                f"coordinator row {a} violated: {sums[a]:.3f} W > "
+                f"{ccap[a]:.3f} W"
+            )

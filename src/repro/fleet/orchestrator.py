@@ -1,0 +1,625 @@
+"""Multi-domain fleet orchestrator: one allocation engine per power domain,
+coordinated by an inter-domain budget planner.
+
+:class:`FleetOrchestrator` is the fleet-scale serving shape of the
+allocator (ROADMAP "engine lifecycle at fleet scale").  The monolithic
+:class:`repro.core.engine.AllocEngine` solves the whole datacenter as one
+program; the orchestrator cuts the PDN at a chosen level
+(:func:`repro.fleet.partition.split_pdn`) and runs the control step as a
+two-level hierarchical solve:
+
+1. the :class:`repro.fleet.coordinator.BudgetCoordinator` turns per-domain
+   aggregate demand into per-domain budget grants, respecting every
+   capacity row above the cut (waterfill on the coordinator tree);
+2. each domain solves its own three-phase problem with its grant as the
+   domain root capacity.
+
+Per-domain solves dispatch in one of two modes:
+
+* ``stacked`` — all K domains padded to a common ``(N, M)`` shape and
+  solved as ONE jitted+vmapped ``solve_three_phase`` program.  The domain
+  topology arrays (tree ranges, capacities, device boxes) are *traced*
+  inputs, so per-step budget grants, supply derating, device join/leave,
+  and even same-shape structural rebuilds of a single domain re-pin arrays
+  without recompiling anything (see :func:`trace_count`);
+* ``loop`` — one persistent :class:`AllocEngine` per domain, stepped in
+  sequence.  Engines over the same geometry share one compiled executable
+  (the engine jit cache is process-wide), and a structural rebuild of one
+  domain never touches the other K-1 engines' compilations.
+
+``mode="auto"`` picks ``stacked`` when the domains are homogeneous enough
+that padding waste is small, else ``loop``.
+
+Warm starts are carried per domain in both modes (a batched
+:class:`repro.core.phases.WarmCarry` with ``[K, ...]`` leaves, or each
+engine's own carry); churn resets only the affected domain's carry.
+
+Tenant SLAs are currently monolithic-only: a tenant spanning two domains
+would couple their solves, which is exactly what the partition removes.
+Use the monolithic engine for SLA fleets, or cut so tenants nest inside
+domains (future work).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compat import enable_x64
+from repro.core import phases
+from repro.core.batched import BatchMeta, solve_three_phase
+from repro.core.engine import AllocEngine, _shape_requests
+from repro.core.nvpax import NvpaxOptions
+from repro.core.problem import AllocProblem
+from repro.core.treeops import SlaTopo, TreeTopo
+from repro.fleet.coordinator import BudgetCoordinator
+from repro.fleet.partition import FleetPartition, split_pdn
+from repro.pdn.tree import FlatPDN, check_caps_fund_minimums
+
+__all__ = ["FleetOrchestrator", "FleetStepResult", "trace_count"]
+
+# stacked-dispatch retrace counter (see repro.core.engine.trace_count for
+# the per-domain engine loop's counter)
+_N_TRACES = 0
+
+
+def trace_count() -> int:
+    """Times the stacked fleet program has been traced in this process."""
+    return _N_TRACES
+
+
+class _DomainBatch(NamedTuple):
+    """[K, ...] padded per-domain fleet arrays (all traced; caps travel
+    separately because they change every step with the grants)."""
+
+    l: jnp.ndarray  # [K, N]
+    u: jnp.ndarray  # [K, N]
+    weight_scale: jnp.ndarray  # [K, N]
+    priority: jnp.ndarray  # [K, N] int32
+    start: jnp.ndarray  # [K, M] int32
+    end: jnp.ndarray  # [K, M] int32
+    depth: jnp.ndarray  # [K, M] int32
+
+
+def _fleet_solve(dom, cap, r, active, warm, *, meta, opts):
+    """All K domain control steps as one traced program."""
+    global _N_TRACES
+    _N_TRACES += 1  # executes at trace time only
+    sla = SlaTopo.empty(dom.l.dtype)
+
+    def one(l, u, ws, pri, start, end, depth, cap_k, r_k, act_k, warm_k):
+        tree = TreeTopo(start=start, end=end, cap=cap_k, depth=depth)
+        ap = AllocProblem(
+            l=l,
+            u=u,
+            r=_shape_requests(r_k, act_k, l, u),
+            priority=pri,
+            active=act_k,
+            tree=tree,
+            sla=sla,
+            weight_scale=ws,
+        )
+        return solve_three_phase(ap, meta, opts, warm_k, None)
+
+    warm_axes = None if warm is None else 0
+    return jax.vmap(one, in_axes=(0,) * 10 + (warm_axes,))(
+        dom.l, dom.u, dom.weight_scale, dom.priority,
+        dom.start, dom.end, dom.depth, cap, r, active, warm,
+    )
+
+
+_fleet_step_jit = jax.jit(_fleet_solve, static_argnames=("meta", "opts"))
+
+
+@dataclasses.dataclass
+class FleetStepResult:
+    """One fleet control step: global allocation + coordinator decisions."""
+
+    allocation: np.ndarray  # [n] global device order (domain concatenation)
+    grants: np.ndarray  # [K] coordinator budget grants (watts)
+    demand: np.ndarray  # [K] per-domain aggregate shaped demand (watts)
+    wall_time_s: float
+    stats: dict[str, Any]  # per-domain solves/iterations/converged arrays
+
+
+class FleetOrchestrator:
+    """Construct-once / step-many fleet runtime over K power domains.
+
+    Parameters
+    ----------
+    pdn : the full datacenter tree.
+    level : cut depth; every node at this depth roots one domain.
+    mode : ``"auto"`` | ``"stacked"`` | ``"loop"`` (see module docstring).
+    coordinator_mode : budget policy, see
+        :class:`repro.fleet.coordinator.BudgetCoordinator`.
+    pad_factor : in ``auto`` mode, use the stacked dispatch when padding
+        every domain to the largest one wastes at most this factor in both
+        device and node counts.
+    """
+
+    def __init__(
+        self,
+        pdn: FlatPDN,
+        *,
+        level: int = 1,
+        options: NvpaxOptions | None = None,
+        priority: np.ndarray | None = None,
+        idle_threshold: float = 150.0,
+        coordinator_mode: str = "waterfill",
+        mode: str = "auto",
+        pad_factor: float = 2.0,
+        dtype=jnp.float64,
+    ):
+        self.partition: FleetPartition = split_pdn(pdn, level)
+        self.coordinator = BudgetCoordinator(self.partition, mode=coordinator_mode)
+        self.options = options or NvpaxOptions()
+        self.idle_threshold = float(idle_threshold)
+        self.dtype = dtype
+        self._x64 = bool(self.options.x64) and dtype == jnp.float64
+        K = self.partition.k
+        if priority is None:
+            priority = np.ones((pdn.n,), np.int32)
+        priority = np.asarray(priority, np.int32)
+        if priority.shape != (pdn.n,):
+            raise ValueError(f"priority shape {priority.shape} != ({pdn.n},)")
+        if (priority < 1).any():
+            raise ValueError("priorities must be >= 1")
+        # mutable per-domain state (survives churn/rebuilds; global device
+        # order is always the domain concatenation in domain index order)
+        self._local_pdn: list[FlatPDN] = [d.pdn for d in self.partition.domains]
+        self._priority: list[np.ndarray] = [
+            priority[d.dev_lo : d.dev_hi].copy() for d in self.partition.domains
+        ]
+        self._dev_l: list[np.ndarray] = [p.dev_l.copy() for p in self._local_pdn]
+        self._dev_u: list[np.ndarray] = [p.dev_u.copy() for p in self._local_pdn]
+        self._node_cap: list[np.ndarray] = [
+            p.node_cap.copy() for p in self._local_pdn
+        ]
+        self._domain_supply = np.ones(K)
+        self._feed_scale = 1.0
+        if mode == "auto":
+            ns = np.array([p.n for p in self._local_pdn])
+            ms = np.array([p.m for p in self._local_pdn])
+            homogeneous = (
+                ns.max() <= pad_factor * ns.min()
+                and ms.max() <= pad_factor * ms.min()
+            )
+            mode = "stacked" if homogeneous else "loop"
+        if mode not in ("stacked", "loop"):
+            raise ValueError(f"mode must be auto/stacked/loop, got {mode!r}")
+        self.mode = mode
+        self._engines: list[AllocEngine] | None = None
+        self._warm: phases.WarmCarry | None = None
+        self.history: list[dict[str, Any]] = []
+        if mode == "stacked":
+            # pad to the largest domain; static metadata is the union over
+            # domains so per-domain differences stay traced, never static
+            self._N = int(max(p.n for p in self._local_pdn))
+            self._M = int(max(p.m for p in self._local_pdn))
+            self.meta = BatchMeta(
+                levels=tuple(
+                    sorted({int(p) for p in priority}, reverse=True)
+                ),
+                n_depths=int(
+                    max(p.node_depth.max() for p in self._local_pdn)
+                ) + 1,
+                pin_free=True,  # fleet mode is SLA-free (see module docstring)
+                max_rounds=self.options.max_rounds,
+                use_waterfill=self.options.use_waterfill,
+                run_phase2=self.options.run_phase2,
+                run_phase3=self.options.run_phase3,
+                eps=self.options.eps,
+            )
+            self._upload()
+        else:
+            self._engines = [
+                AllocEngine(
+                    p,
+                    priority=self._priority[k],
+                    options=self.options,
+                    idle_threshold=self.idle_threshold,
+                )
+                for k, p in enumerate(self._local_pdn)
+            ]
+
+    # -- geometry ----------------------------------------------------------
+
+    @property
+    def k(self) -> int:
+        return self.partition.k
+
+    @property
+    def domain_sizes(self) -> np.ndarray:
+        return np.array([p.n for p in self._local_pdn], np.int64)
+
+    @property
+    def n(self) -> int:
+        """Current total device count (changes on structural rebuilds)."""
+        return int(self.domain_sizes.sum())
+
+    def _offsets(self) -> np.ndarray:
+        return np.concatenate([[0], np.cumsum(self.domain_sizes)])
+
+    def device_bounds(self) -> np.ndarray:
+        """[n] current global lower bounds (domain concatenation order)."""
+        return np.concatenate(self._dev_l)
+
+    def device_caps(self) -> np.ndarray:
+        return np.concatenate(self._dev_u)
+
+    # -- stacked-mode array management -------------------------------------
+
+    def _ctx(self):
+        return enable_x64(True) if self._x64 else contextlib.nullcontext()
+
+    def _upload(self) -> None:
+        """(Re)build the padded [K, ...] device arrays from host mirrors."""
+        K, N, M = self.k, self._N, self._M
+        l = np.zeros((K, N))
+        u = np.zeros((K, N))
+        ws = np.ones((K, N))
+        pri = np.ones((K, N), np.int32)
+        start = np.full((K, M), N, np.int32)  # padded nodes: empty range
+        end = np.full((K, M), N, np.int32)
+        depth = np.zeros((K, M), np.int32)
+        cap = np.full((K, M), np.inf)
+        for k, p in enumerate(self._local_pdn):
+            l[k, : p.n] = self._dev_l[k]
+            u[k, : p.n] = self._dev_u[k]
+            pri[k, : p.n] = self._priority[k]
+            start[k, : p.m] = p.node_start
+            end[k, : p.m] = p.node_end
+            depth[k, : p.m] = p.node_depth
+            cap[k, : p.m] = self._node_cap[k]
+        self._cap_np = cap  # host mirror; row 0 gets the per-step grants
+        with self._ctx():
+            self._dom = _DomainBatch(
+                l=jnp.asarray(l, self.dtype),
+                u=jnp.asarray(u, self.dtype),
+                weight_scale=jnp.asarray(ws, self.dtype),
+                priority=jnp.asarray(pri),
+                start=jnp.asarray(start),
+                end=jnp.asarray(end),
+                depth=jnp.asarray(depth),
+            )
+
+    def _reset_domain_warm(self, k: int) -> None:
+        if self.mode == "loop":
+            if self._engines is not None:
+                self._engines[k].reset_warm()
+        elif self._warm is not None:
+            with self._ctx():
+                self._warm = jax.tree_util.tree_map(
+                    lambda a: a.at[k].set(jnp.zeros_like(a[k])), self._warm
+                )
+
+    # -- lifecycle: supply + churn re-pins ---------------------------------
+
+    def set_domain_supply(self, k: int, scale: float) -> None:
+        """Derate (or restore) one domain's feed: the coordinator caps that
+        domain's grant at ``scale`` x its subtree capacity from the next
+        step on.  Pure coordinator state — nothing recompiles, and the
+        freed budget is redistributed to the other domains.
+
+        The derated feed must still fund the domain's current minimum draw
+        (grants below it make the domain's own problem infeasible); for a
+        deeper derate — including a full outage — mask devices out first
+        (:meth:`repro.fleet.lifecycle.FleetLifecycle.device_leave`).
+        ``scale`` is capped at 1.0: the PDN caps are physical limits, not a
+        planning knob (1.0 restores the nameplate feed).
+        """
+        if not 0.0 <= scale <= 1.0:
+            raise ValueError(f"scale must be in [0, 1], got {scale}")
+        dmin = float(self._dev_l[k].sum())
+        cap = float(self._node_cap[k][0]) * float(scale)
+        if cap < dmin - 1e-9:
+            raise ValueError(
+                f"domain {k} derated feed {cap:.1f} W cannot fund its "
+                f"minimum draw {dmin:.1f} W; mask devices out first "
+                "(FleetLifecycle.device_leave)"
+            )
+        self._domain_supply[k] = float(scale)
+
+    def set_feed_scale(self, scale: float) -> None:
+        """Derate every capacity above the cut (utility feed event).  Like
+        :meth:`set_domain_supply`, the derated rows must still fund the
+        fleet's current minimum draw and ``scale`` cannot exceed 1.0."""
+        if not 0.0 <= scale <= 1.0:
+            raise ValueError(f"scale must be in [0, 1], got {scale}")
+        dmin = np.array([l.sum() for l in self._dev_l])
+        check_caps_fund_minimums(
+            self.coordinator.start, self.coordinator.end,
+            self.coordinator.cap * float(scale), dmin,
+            what=f"feed scale {scale}: coordinator row",
+        )
+        self._feed_scale = float(scale)
+
+    def _check_effective_floors(
+        self, dmin: np.ndarray, dcap: np.ndarray | None = None
+    ) -> None:
+        """The *derated* feeds (domain supplies + feed scale) must fund the
+        given per-domain minimum draws — the same invariant
+        ``set_domain_supply``/``set_feed_scale`` enforce, checked from the
+        other direction when floors rise (device rejoin, box re-pins)."""
+        if dcap is None:
+            dcap = np.array([c[0] for c in self._node_cap]) * self._domain_supply
+        bad = np.nonzero(dmin > dcap + 1e-9)[0]
+        if bad.size:
+            k = int(bad[0])
+            raise ValueError(
+                f"domain {k} minimum draw {dmin[k]:.1f} W exceeds its "
+                f"derated feed {dcap[k]:.1f} W; restore the supply first "
+                "(set_domain_supply)"
+            )
+        check_caps_fund_minimums(
+            self.coordinator.start, self.coordinator.end,
+            self.coordinator.cap * self._feed_scale, dmin,
+            what="derated coordinator row",
+        )
+
+    def repin_domain(
+        self,
+        k: int,
+        *,
+        dev_l: np.ndarray | None = None,
+        dev_u: np.ndarray | None = None,
+        node_cap: np.ndarray | None = None,
+        reset_warm: bool = True,
+    ) -> None:
+        """Swap same-shape arrays of ONE domain (device join/leave masks,
+        cap trims).  The other K-1 domains' compiled work is untouched in
+        both modes; in stacked mode nothing recompiles at all.
+
+        The whole re-pin is validated (box ordering, caps >= subtree
+        minimum draw — the same checks as ``AllocEngine.repin``) before any
+        orchestrator state changes, so a rejected re-pin leaves mirrors,
+        engines and device arrays consistent.
+        """
+        p = self._local_pdn[k]
+        new_l = self._dev_l[k] if dev_l is None else np.asarray(dev_l, np.float64)
+        new_u = self._dev_u[k] if dev_u is None else np.asarray(dev_u, np.float64)
+        new_cap = (
+            self._node_cap[k] if node_cap is None
+            else np.asarray(node_cap, np.float64)
+        )
+        if new_l.shape != (p.n,) or new_u.shape != (p.n,):
+            raise ValueError(
+                f"dev_l/dev_u shapes {new_l.shape}/{new_u.shape} != ({p.n},)"
+            )
+        if new_cap.shape != (p.m,):
+            raise ValueError(f"node_cap shape {new_cap.shape} != ({p.m},)")
+        if (new_l < 0).any() or (new_l > new_u + 1e-12).any():
+            raise ValueError("device limits must satisfy 0 <= l <= u")
+        check_caps_fund_minimums(
+            p.node_start, p.node_end, new_cap, new_l,
+            what=f"domain {k} node",
+        )
+        # an active derate must also still fund the (possibly raised) floor
+        # — otherwise the failure would surface one step later in plan()
+        dmin_all = np.array([l.sum() for l in self._dev_l])
+        dmin_all[k] = new_l.sum()
+        dcap_eff = np.array([c[0] for c in self._node_cap]) * self._domain_supply
+        dcap_eff[k] = new_cap[0] * self._domain_supply[k]
+        self._check_effective_floors(dmin_all, dcap_eff)
+        self._dev_l[k] = new_l.copy()
+        self._dev_u[k] = new_u.copy()
+        self._node_cap[k] = new_cap.copy()
+        if self.mode == "loop":
+            assert self._engines is not None
+            # always pass the nameplate caps: the engine's live root cap
+            # still holds the previous step's coordinator grant, which
+            # could spuriously fail a join that the next grant would fund
+            # (the grant is re-applied by set_root_cap on the next step)
+            self._engines[k].repin(
+                dev_l=new_l, dev_u=new_u, node_cap=new_cap,
+                reset_warm=reset_warm,
+            )
+        else:
+            # update only row k (O(N) host work + one-row transfers); the
+            # full K-domain rebuild is reserved for structural rebuilds
+            if dev_l is not None or dev_u is not None:
+                row_l = np.zeros(self._N)
+                row_u = np.zeros(self._N)
+                row_l[: p.n] = self._dev_l[k]
+                row_u[: p.n] = self._dev_u[k]
+                with self._ctx():
+                    self._dom = self._dom._replace(
+                        l=self._dom.l.at[k].set(jnp.asarray(row_l, self.dtype)),
+                        u=self._dom.u.at[k].set(jnp.asarray(row_u, self.dtype)),
+                    )
+            if node_cap is not None:
+                self._cap_np[k, : p.m] = self._node_cap[k]
+            if reset_warm:
+                self._reset_domain_warm(k)
+
+    def rebuild_domain(
+        self,
+        k: int,
+        new_pdn: FlatPDN,
+        *,
+        priority: np.ndarray | None = None,
+    ) -> None:
+        """Replace one domain's topology (structural churn: servers added or
+        decommissioned).  Only this domain's engine is rebuilt; the other
+        K-1 domains keep their compiled programs and warm state.  In stacked
+        mode the new topology must fit the padded shape and static metadata
+        (device/node counts, tree depth, priority levels); it then re-pins
+        as traced arrays with zero recompilation.
+        """
+        new_pdn.validate()
+        if priority is None:
+            priority = np.ones((new_pdn.n,), np.int32)
+        priority = np.asarray(priority, np.int32)
+        if priority.shape != (new_pdn.n,):
+            raise ValueError(f"priority shape {priority.shape} != ({new_pdn.n},)")
+        if self.mode == "stacked":
+            if new_pdn.n > self._N or new_pdn.m > self._M:
+                raise ValueError(
+                    f"domain {k} rebuild ({new_pdn.n} devices, {new_pdn.m} "
+                    f"nodes) exceeds the padded shape ({self._N}, {self._M}); "
+                    "rebuild the orchestrator"
+                )
+            if int(new_pdn.node_depth.max()) + 1 > self.meta.n_depths:
+                raise ValueError("rebuild deepens the tree; rebuild the orchestrator")
+            if not set(int(x) for x in np.unique(priority)) <= set(self.meta.levels):
+                raise ValueError(
+                    "rebuild introduces new priority levels; rebuild the orchestrator"
+                )
+        self._local_pdn[k] = new_pdn
+        self._priority[k] = priority.copy()
+        self._dev_l[k] = new_pdn.dev_l.copy()
+        self._dev_u[k] = new_pdn.dev_u.copy()
+        self._node_cap[k] = new_pdn.node_cap.copy()
+        if self.mode == "loop":
+            assert self._engines is not None
+            self._engines[k] = AllocEngine(
+                new_pdn,
+                priority=priority,
+                options=self.options,
+                idle_threshold=self.idle_threshold,
+            )
+        else:
+            self._upload()
+            self._reset_domain_warm(k)
+
+    def reset_warm(self) -> None:
+        self._warm = None
+        if self._engines is not None:
+            for e in self._engines:
+                e.reset_warm()
+
+    # -- the control step --------------------------------------------------
+
+    def _effective_domain_caps(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(domain_cap, coord_cap, domain_min) under current supply state."""
+        dcap = np.array([c[0] for c in self._node_cap]) * self._domain_supply
+        ccap = self.coordinator.cap * self._feed_scale
+        dmin = np.array([l.sum() for l in self._dev_l])
+        return dcap, ccap, dmin
+
+    def plan(self, demand: np.ndarray) -> np.ndarray:
+        """Coordinator grants for a demand vector under current supply."""
+        dcap, ccap, dmin = self._effective_domain_caps()
+        return self.coordinator.plan(
+            demand, domain_cap=dcap, coord_cap=ccap, domain_min=dmin,
+            domain_n=self.domain_sizes,
+        )
+
+    def step(
+        self,
+        telemetry: np.ndarray,
+        *,
+        active: np.ndarray | None = None,
+    ) -> FleetStepResult:
+        """One fleet control step: telemetry [n] watts -> allocation [n].
+
+        Telemetry and the returned allocation are in global device order
+        (domain concatenation).  Host-side work is O(n) request shaping,
+        the O(K + m_above_cut) coordinator plan, and the scatter/gather
+        into the per-domain layout; all solves are compiled programs.
+        """
+        n = self.n
+        req = np.asarray(telemetry, np.float64)
+        if req.shape != (n,):
+            raise ValueError(f"telemetry shape {req.shape} != ({n},)")
+        if active is None:
+            active = req >= self.idle_threshold
+        active = np.asarray(active, bool)
+        if active.shape != (n,):
+            raise ValueError(f"active shape {active.shape} != ({n},)")
+        l_all = self.device_bounds()
+        u_all = self.device_caps()
+        shaped = np.where(active, np.clip(req, l_all, u_all), l_all)
+        offs = self._offsets()
+        demand = np.array(
+            [shaped[offs[k] : offs[k + 1]].sum() for k in range(self.k)]
+        )
+        grants = self.plan(demand)
+        t0 = time.perf_counter()
+        if self.mode == "stacked":
+            res = self._step_stacked(req, active, grants, offs)
+        else:
+            res = self._step_loop(req, active, grants, offs)
+        wall = time.perf_counter() - t0
+        out = FleetStepResult(
+            allocation=res[0],
+            grants=grants,
+            demand=demand,
+            wall_time_s=wall,
+            stats=res[1],
+        )
+        self.history.append(
+            {
+                "wall_s": wall,
+                "converged": bool(np.all(out.stats["converged"])),
+                "solves": int(np.sum(out.stats["solves"])),
+                "iterations": int(np.sum(out.stats["iterations"])),
+                "granted_W": float(grants.sum()),
+                "demand_W": float(demand.sum()),
+            }
+        )
+        return out
+
+    def _step_stacked(self, req, active, grants, offs):
+        K, N = self.k, self._N
+        r = np.zeros((K, N))
+        act = np.zeros((K, N), bool)
+        for k in range(K):
+            nk = int(self.domain_sizes[k])
+            r[k, :nk] = req[offs[k] : offs[k + 1]]
+            act[k, :nk] = active[offs[k] : offs[k + 1]]
+        cap = self._cap_np.copy()
+        cap[:, 0] = grants
+        with self._ctx():
+            x1, x2, x3, carry, stats = _fleet_step_jit(
+                self._dom,
+                jnp.asarray(cap, self.dtype),
+                jnp.asarray(r, self.dtype),
+                jnp.asarray(act),
+                self._warm,
+                meta=self.meta,
+                opts=self.options.solver,
+            )
+            x3 = np.asarray(x3.block_until_ready())
+        self._warm = carry
+        alloc = np.concatenate(
+            [x3[k, : int(self.domain_sizes[k])] for k in range(K)]
+        )
+        return alloc, {
+            "solves": np.asarray(stats["solves"]),
+            "iterations": np.asarray(stats["iterations"]),
+            "iterations_per_phase": np.stack(
+                [np.asarray(stats[f"iterations_p{i}"]) for i in (1, 2, 3)],
+                axis=-1,
+            ),
+            "converged": np.asarray(stats["converged"]),
+            "mode": "stacked",
+        }
+
+    def _step_loop(self, req, active, grants, offs):
+        assert self._engines is not None
+        allocs, solves, iters, phase_iters, conv = [], [], [], [], []
+        for k, eng in enumerate(self._engines):
+            eng.set_root_cap(grants[k])  # traced cap swap: no recompile
+            res = eng.step(
+                req[offs[k] : offs[k + 1]],
+                active=active[offs[k] : offs[k + 1]],
+            )
+            allocs.append(res.allocation)
+            solves.append(res.stats["total_solves"])
+            iters.append(res.stats["total_iterations"])
+            phase_iters.append(res.stats["phase_iterations"])
+            conv.append(res.stats["converged"])
+        return np.concatenate(allocs), {
+            "solves": np.asarray(solves),
+            "iterations": np.asarray(iters),
+            "iterations_per_phase": np.asarray(phase_iters),
+            "converged": np.asarray(conv),
+            "mode": "loop",
+        }

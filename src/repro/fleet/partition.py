@@ -1,0 +1,189 @@
+"""Partition a datacenter PDN into independent power domains.
+
+The fleet orchestrator (ISSUE 3 / ROADMAP "engine lifecycle at fleet
+scale") shards the monolithic allocation problem by cutting the PDN tree at
+a chosen depth: every node at ``level`` becomes the root of one *power
+domain* — an independent subtree with its own allocation engine.  Because
+devices are DFS-ordered (see :mod:`repro.pdn.tree`), each domain owns a
+contiguous device range and a contiguous node range, so splitting is pure
+array slicing and the global allocation is the concatenation of the
+per-domain allocations.
+
+What remains above the cut — the root feed and any intermediate nodes at
+depth < ``level`` — becomes the *coordinator tree*: a small tree whose
+leaves are the domains themselves.  The inter-domain budget coordinator
+(:mod:`repro.fleet.coordinator`) solves a miniature allocation problem over
+it (domains as "devices", their aggregate demands as "requests"), which is
+the two-level hierarchical solve the paper motivates: per-domain solvers
+respect intra-domain caps, the coordinator respects every cap above the
+cut.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.pdn.tree import FlatPDN
+
+__all__ = ["DomainSpec", "FleetPartition", "split_pdn"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DomainSpec:
+    """One power domain: a subtree cut out of the fleet PDN.
+
+    ``pdn`` is the rebased local topology (domain root = local node 0,
+    local device 0 = global device ``dev_lo``).  The local root capacity
+    equals the cut node's capacity; the coordinator may grant less (never
+    more than ancestors allow).
+    """
+
+    index: int
+    node_lo: int  # global node range [node_lo, node_hi)
+    node_hi: int
+    dev_lo: int  # global device range [dev_lo, dev_hi)
+    dev_hi: int
+    pdn: FlatPDN  # rebased local topology
+
+    @property
+    def n(self) -> int:
+        return self.dev_hi - self.dev_lo
+
+    @property
+    def m(self) -> int:
+        return self.node_hi - self.node_lo
+
+    @property
+    def cap(self) -> float:
+        return float(self.pdn.node_cap[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetPartition:
+    """A fleet PDN split into K domains + the coordinator tree above them.
+
+    The coordinator tree is expressed in *domain index space*: node ``a``
+    covers domains ``[coord_start[a], coord_end[a])``, with capacity
+    ``coord_cap[a]``.  Node 0 is the root feed.  It has the same
+    DFS-contiguity invariant as the device-level tree, so the same
+    water-filling code applies to both levels.
+    """
+
+    pdn: FlatPDN  # the full fleet
+    level: int  # cut depth (domain roots have this depth globally)
+    domains: tuple[DomainSpec, ...]
+    coord_start: np.ndarray  # [m_anc] int32, in domain indices
+    coord_end: np.ndarray  # [m_anc] int32
+    coord_cap: np.ndarray  # [m_anc] float64
+    coord_depth: np.ndarray  # [m_anc] int32
+
+    @property
+    def k(self) -> int:
+        return len(self.domains)
+
+    @property
+    def domain_cap(self) -> np.ndarray:
+        """[K] cut-node capacities (each domain's own subtree budget)."""
+        return np.array([d.cap for d in self.domains])
+
+    def domain_of_device(self) -> np.ndarray:
+        """[n] domain index of every device."""
+        out = np.empty(self.pdn.n, np.int32)
+        for d in self.domains:
+            out[d.dev_lo : d.dev_hi] = d.index
+        return out
+
+    def split_device_array(self, x: np.ndarray) -> list[np.ndarray]:
+        """Slice a global ``[..., n]`` device array into per-domain views."""
+        return [x[..., d.dev_lo : d.dev_hi] for d in self.domains]
+
+
+def _extract_domain(pdn: FlatPDN, index: int, node_lo: int, node_hi: int) -> DomainSpec:
+    dev_lo = int(pdn.node_start[node_lo])
+    dev_hi = int(pdn.node_end[node_lo])
+    node_sl = slice(node_lo, node_hi)
+    parent = pdn.node_parent[node_sl] - node_lo
+    parent[0] = -1
+    local = FlatPDN(
+        node_start=(pdn.node_start[node_sl] - dev_lo).astype(np.int32),
+        node_end=(pdn.node_end[node_sl] - dev_lo).astype(np.int32),
+        node_cap=pdn.node_cap[node_sl].copy(),
+        node_parent=parent.astype(np.int32),
+        node_depth=(pdn.node_depth[node_sl] - pdn.node_depth[node_lo]).astype(
+            np.int32
+        ),
+        dev_l=pdn.dev_l[dev_lo:dev_hi].copy(),
+        dev_u=pdn.dev_u[dev_lo:dev_hi].copy(),
+        dev_node=(pdn.dev_node[dev_lo:dev_hi] - node_lo).astype(np.int32),
+        dev_depth=(pdn.dev_depth[dev_lo:dev_hi] - pdn.node_depth[node_lo]).astype(
+            np.int32
+        ),
+    )
+    local.validate()
+    return DomainSpec(
+        index=index,
+        node_lo=node_lo,
+        node_hi=node_hi,
+        dev_lo=dev_lo,
+        dev_hi=dev_hi,
+        pdn=local,
+    )
+
+
+def split_pdn(pdn: FlatPDN, level: int) -> FleetPartition:
+    """Cut the fleet tree at depth ``level`` into independent power domains.
+
+    Every node at ``level`` roots one domain.  Devices must all live at or
+    below the cut — a device attached directly to an ancestor node would
+    belong to no domain, which is a partitioning error, not a degenerate
+    case (put the cut above it instead).
+    """
+    if level < 1:
+        raise ValueError(f"cut level must be >= 1, got {level}")
+    depth = pdn.node_depth
+    cut_nodes = np.nonzero(depth == level)[0]
+    if cut_nodes.size == 0:
+        raise ValueError(
+            f"no nodes at depth {level} (tree depth max {int(depth.max())})"
+        )
+    shallow = depth[pdn.dev_node] < level
+    if shallow.any():
+        i = int(np.nonzero(shallow)[0][0])
+        raise ValueError(
+            f"device {i} is attached to node {int(pdn.dev_node[i])} above the "
+            f"cut (depth {int(depth[pdn.dev_node[i]])} < {level}); choose a "
+            "deeper attachment or a shallower cut"
+        )
+    # subtree node range of cut node j: [j, next node with depth <= level)
+    domains = []
+    for idx, j in enumerate(cut_nodes):
+        after = np.nonzero(depth[j + 1 :] <= level)[0]
+        j_hi = int(j + 1 + after[0]) if after.size else pdn.m
+        domains.append(_extract_domain(pdn, idx, int(j), j_hi))
+    # domains must tile the device range exactly
+    lo = 0
+    for d in domains:
+        if d.dev_lo != lo:
+            raise ValueError(
+                f"domains do not tile the device range at {lo} (domain "
+                f"{d.index} starts at {d.dev_lo})"
+            )
+        lo = d.dev_hi
+    if lo != pdn.n:
+        raise ValueError(f"domains cover {lo} of {pdn.n} devices")
+    # coordinator tree: nodes above the cut, ranges rebased to domain indices
+    anc = np.nonzero(depth < level)[0]
+    dom_lo = np.array([d.dev_lo for d in domains])
+    coord_start = np.searchsorted(dom_lo, pdn.node_start[anc], side="left")
+    coord_end = np.searchsorted(dom_lo, pdn.node_end[anc] - 1, side="right")
+    return FleetPartition(
+        pdn=pdn,
+        level=level,
+        domains=tuple(domains),
+        coord_start=coord_start.astype(np.int32),
+        coord_end=coord_end.astype(np.int32),
+        coord_cap=pdn.node_cap[anc].copy(),
+        coord_depth=depth[anc].copy(),
+    )

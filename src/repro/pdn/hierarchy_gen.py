@@ -15,7 +15,12 @@ import numpy as np
 
 from repro.pdn.tree import FlatPDN, PDNNode, flatten
 
-__all__ = ["random_hierarchy", "nonuniform_example", "NONUNIFORM_REQUESTS"]
+__all__ = [
+    "random_hierarchy",
+    "nonuniform_example",
+    "homogeneous_fleet",
+    "NONUNIFORM_REQUESTS",
+]
 
 
 def random_hierarchy(
@@ -56,6 +61,47 @@ def random_hierarchy(
         return node
 
     root = build(0, int(n_devices))
+    return flatten(root, default_l=l, default_u=u)
+
+
+def homogeneous_fleet(
+    n_domains: int = 4,
+    *,
+    racks_per_domain: int = 2,
+    servers_per_rack: int = 2,
+    gpus_per_server: int = 4,
+    l: float = 200.0,
+    u: float = 700.0,
+    domain_oversub: float = 0.85,
+    root_oversub: float = 1.0,
+) -> FlatPDN:
+    """K identical power domains under one utility feed (fleet-mode fixture).
+
+    Each domain is a hall-like subtree (racks -> servers -> devices) with
+    ``domain_oversub`` applied at the rack and domain levels.  The root feed
+    carries ``root_oversub * sum(domain caps)``: at the default 1.0 the root
+    row can never bind, which is the regime where the two-level fleet solve
+    (per-domain engines + subtree-budget grants) is *exactly* the monolithic
+    solve — the parity case asserted in ``tests/test_fleet.py``.  Values
+    < 1.0 make the feed scarce so the inter-domain coordinator has real
+    borrowing decisions to make (the benchmark's brownout scenarios).
+    """
+    server_cap = gpus_per_server * u
+    rack_cap = domain_oversub * servers_per_rack * server_cap
+    dom_cap = domain_oversub * racks_per_domain * rack_cap
+    root = PDNNode(capacity=root_oversub * n_domains * dom_cap, name="feed")
+    for d in range(n_domains):
+        dom = root.add(PDNNode(capacity=dom_cap, name=f"dom{d}"))
+        for r in range(racks_per_domain):
+            rack = dom.add(PDNNode(capacity=rack_cap, name=f"dom{d}/rack{r}"))
+            for s in range(servers_per_rack):
+                rack.add(
+                    PDNNode(
+                        capacity=server_cap,
+                        n_devices=gpus_per_server,
+                        name=f"dom{d}/rack{r}/srv{s}",
+                    )
+                )
     return flatten(root, default_l=l, default_u=u)
 
 

@@ -27,7 +27,39 @@ __all__ = [
     "flatten",
     "build_datacenter",
     "build_from_level_sizes",
+    "check_caps_fund_minimums",
 ]
+
+
+def check_caps_fund_minimums(
+    start: np.ndarray,
+    end: np.ndarray,
+    cap: np.ndarray,
+    lower: np.ndarray,
+    *,
+    what: str = "node",
+    tol: float = 1e-9,
+) -> np.ndarray:
+    """Necessary-feasibility check shared by every capacity re-pin path.
+
+    For DFS-contiguous ranges ``[start_j, end_j)`` over per-leaf lower
+    bounds ``lower``, verify each range's capacity can fund the covered
+    minimum draw; raise ``ValueError`` naming the first violated row
+    otherwise.  Works at both levels of the hierarchy: device-level PDN
+    nodes (``lower`` = device minimums) and the fleet coordinator tree
+    (``lower`` = per-domain minimum draws).  Returns the per-row minimum
+    draws for callers that cache them.
+    """
+    csum = np.concatenate([[0.0], np.cumsum(np.asarray(lower, np.float64))])
+    lmin = csum[end] - csum[start]
+    bad = np.nonzero(lmin > np.asarray(cap, np.float64) + tol)[0]
+    if bad.size:
+        j = int(bad[0])
+        raise ValueError(
+            f"infeasible: {what} {j} cap {float(cap[j]):.1f} W < covered "
+            f"minimum draw {lmin[j]:.1f} W"
+        )
+    return lmin
 
 
 @dataclasses.dataclass

@@ -39,7 +39,7 @@ from repro.core.engine import AllocEngine
 from repro.core.nvpax import AllocResult, NvpaxOptions, optimize
 from repro.core.problem import AllocProblem, FleetTopology
 from repro.core.treeops import SlaTopo
-from repro.pdn.tree import FlatPDN
+from repro.pdn.tree import FlatPDN, check_caps_fund_minimums
 
 __all__ = ["ControllerConfig", "PowerController"]
 
@@ -91,11 +91,24 @@ class PowerController:
 
     def set_supply_scale(self, scale: float) -> None:
         """Utility feed reduction (e.g. grid event): all node capacities are
-        scaled at problem-build time next step.  Capacities are engine
-        topology, so the pinned engine is rebuilt on the next step."""
-        self.supply_scale = float(scale)
+        scaled starting next step.  Capacities enter the engine's compiled
+        program as traced arrays, so the existing engine is re-pinned in
+        place (``AllocEngine.rescale_supply``) — same shapes, no recompile
+        (asserted via ``repro.core.engine.trace_count`` in
+        ``tests/test_fleet.py``).  The legacy path's prebuilt topology is
+        invalidated and rebuilt lazily."""
+        scale = float(scale)
+        # validate before committing any state: a rejected drop must leave
+        # the recorded scale, engine caps and prebuilt topology consistent
+        check_caps_fund_minimums(
+            self.pdn.node_start, self.pdn.node_end,
+            self.pdn.node_cap * scale, self.pdn.dev_l,
+            what=f"supply scale {scale}: node",
+        )
+        self.supply_scale = scale
         self._reset_solver_state()
-        self._engine = None
+        if self._engine is not None:
+            self._engine.rescale_supply(self.supply_scale)
         self._topology = None
 
     def _reset_solver_state(self) -> None:
@@ -143,13 +156,18 @@ class PowerController:
 
     def _get_engine(self) -> AllocEngine:
         if self._engine is None:
+            # build from the unscaled PDN and re-pin: rescale_supply scales
+            # are absolute vs construction-time caps, so later supply events
+            # compose correctly with the construction-time state
             self._engine = AllocEngine(
-                self._effective_pdn(),
+                self.pdn,
                 sla=self.sla,
                 priority=self.priority,
                 options=self.config.options,
                 idle_threshold=self.config.idle_threshold,
             )
+            if self.supply_scale != 1.0:
+                self._engine.rescale_supply(self.supply_scale, reset_warm=False)
         return self._engine
 
     # -- main loop ---------------------------------------------------------

@@ -3,12 +3,24 @@ job throughput.  This is the large-scale experiment harness behind the
 paper's section 5 (and our benchmarks/), extended with the performance
 feedback loop the paper motivates but does not model: caps map to clocks
 (DVFS) and synchronous jobs run at their slowest member's clock.
+
+Two control planes:
+
+* **monolithic** — one :class:`repro.power.PowerController` over the whole
+  PDN (the paper's deployment shape);
+* **fleet** — a :class:`repro.fleet.FleetOrchestrator`: per-power-domain
+  engines plus the inter-domain budget coordinator (``fleet_level=`` in
+  :meth:`DatacenterSim.build`, or pass an orchestrator directly).
+
+``run(prefetch=True)`` overlaps telemetry decode with the solve via the
+fleet layer's double-buffered ingestion (valid in both modes; telemetry is
+a pure function of the timestamp, so results are bit-identical).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import TYPE_CHECKING, Any
 
 import numpy as np
 
@@ -20,6 +32,9 @@ from repro.power.controller import ControllerConfig, PowerController
 from repro.power.power_model import DvfsModel
 from repro.power.straggler import straggler_report
 
+if TYPE_CHECKING:  # pragma: no cover - typing only (avoid import cycle cost)
+    from repro.fleet import FleetOrchestrator
+
 __all__ = ["DatacenterSim"]
 
 
@@ -27,52 +42,108 @@ __all__ = ["DatacenterSim"]
 class DatacenterSim:
     pdn: FlatPDN
     trace: TelemetrySim
-    controller: PowerController
+    controller: PowerController | None = None
+    orchestrator: "FleetOrchestrator | None" = None
     dvfs: DvfsModel = dataclasses.field(default_factory=DvfsModel)
 
     @classmethod
     def build(cls, pdn: FlatPDN, *, seed: int = 0,
               controller: PowerController | None = None,
+              orchestrator: "FleetOrchestrator | None" = None,
+              fleet_level: int | None = None,
               trace_cfg: TraceConfig | None = None) -> "DatacenterSim":
+        """``fleet_level`` switches to fleet mode: the PDN is cut at that
+        depth into power domains served by a :class:`FleetOrchestrator`
+        (waterfill budget coordination).  Pass ``orchestrator`` instead for
+        a custom-configured one."""
         trace = TelemetrySim(
             trace_cfg or TraceConfig(n_devices=pdn.n, seed=seed)
         )
-        ctrl = controller or PowerController(pdn)
-        return cls(pdn=pdn, trace=trace, controller=ctrl)
+        if controller is not None and (
+            orchestrator is not None or fleet_level is not None
+        ):
+            raise ValueError(
+                "controller and orchestrator/fleet_level are mutually "
+                "exclusive control planes"
+            )
+        if orchestrator is None and fleet_level is not None:
+            from repro.fleet import FleetOrchestrator
+
+            orchestrator = FleetOrchestrator(pdn, level=fleet_level)
+        ctrl = None
+        if orchestrator is None:
+            ctrl = controller or PowerController(pdn)
+        return cls(pdn=pdn, trace=trace, controller=ctrl,
+                   orchestrator=orchestrator)
+
+    @property
+    def _idle_threshold(self) -> float:
+        if self.orchestrator is not None:
+            return self.orchestrator.idle_threshold
+        assert self.controller is not None
+        return self.controller.config.idle_threshold
+
+    def _step_alloc(self, power, active):
+        """Dispatch one control step; returns (allocation, wall_s, truncated)."""
+        if self.orchestrator is not None:
+            res = self.orchestrator.step(power, active=active)
+            return res.allocation, res.wall_time_s, False
+        assert self.controller is not None
+        res = self.controller.step(power, active=active)
+        wall = self.controller.history[-1]["wall_s"]
+        return res.allocation, wall, bool(res.stats.get("truncated", False))
 
     def run(self, steps: int, *, start: int = 0, baselines: bool = True,
-            use_scheduler_state: bool = True) -> dict[str, Any]:
-        """Run ``steps`` control intervals; returns per-step metric arrays."""
+            use_scheduler_state: bool = True,
+            prefetch: bool = False) -> dict[str, Any]:
+        """Run ``steps`` control intervals; returns per-step metric arrays.
+
+        ``prefetch`` decodes step ``t + 1``'s telemetry on a background
+        worker while step ``t`` solves (double-buffered ingestion; same
+        results, lower per-step host time).
+        """
         out: dict[str, list] = {
             "S_nvpax": [], "S_static": [], "S_greedy": [],
             "wall_ms": [], "straggler_tax": [], "truncated": [],
         }
-        for t in range(start, start + steps):
-            power = self.trace.power(t)
-            active = (
-                self.trace.active_mask(t) if use_scheduler_state else None
-            )
-            res = self.controller.step(power, active=active)
-            r = np.clip(power, self.pdn.dev_l, self.pdn.dev_u)
-            r = np.where(
-                active if active is not None
-                else power >= self.controller.config.idle_threshold,
-                r, self.pdn.dev_l,
-            )
-            out["S_nvpax"].append(satisfaction_ratio(r, res.allocation))
-            out["wall_ms"].append(
-                1000 * self.controller.history[-1]["wall_s"]
-            )
-            # deadline/anytime mode (engine path reports it; host path too)
-            out["truncated"].append(bool(res.stats.get("truncated", False)))
-            rep = straggler_report(res.allocation, self.trace.job_of,
-                                   self.dvfs)
-            out["straggler_tax"].append(rep["mean_tax"])
-            if baselines:
-                out["S_static"].append(
-                    satisfaction_ratio(r, static_allocate(self.pdn))
+        # the static baseline is request-independent: one allocation serves
+        # every step (hoisted out of the loop — it used to dominate per-step
+        # host time at large n)
+        static_alloc = static_allocate(self.pdn) if baselines else None
+        fetch = self.trace.power
+        buf = None
+        if prefetch:
+            from repro.fleet.lifecycle import TelemetryDoubleBuffer
+
+            buf = TelemetryDoubleBuffer(self.trace.power)
+            fetch = buf.fetch
+        try:
+            for t in range(start, start + steps):
+                power = fetch(t)
+                active = (
+                    self.trace.active_mask(t) if use_scheduler_state else None
                 )
-                out["S_greedy"].append(
-                    satisfaction_ratio(r, greedy_allocate(self.pdn, power))
+                alloc, wall, truncated = self._step_alloc(power, active)
+                r = np.clip(power, self.pdn.dev_l, self.pdn.dev_u)
+                r = np.where(
+                    active if active is not None
+                    else power >= self._idle_threshold,
+                    r, self.pdn.dev_l,
                 )
+                out["S_nvpax"].append(satisfaction_ratio(r, alloc))
+                out["wall_ms"].append(1000 * wall)
+                # deadline/anytime mode (engine path reports it; host path too)
+                out["truncated"].append(truncated)
+                rep = straggler_report(alloc, self.trace.job_of, self.dvfs)
+                out["straggler_tax"].append(rep["mean_tax"])
+                if baselines:
+                    out["S_static"].append(
+                        satisfaction_ratio(r, static_alloc)
+                    )
+                    out["S_greedy"].append(
+                        satisfaction_ratio(r, greedy_allocate(self.pdn, power))
+                    )
+        finally:
+            if buf is not None:
+                buf.close()
         return {k: np.asarray(v) for k, v in out.items() if v}

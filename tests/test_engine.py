@@ -324,15 +324,65 @@ def test_what_if_is_stateless_and_deterministic(pdn, sla_fleet):
     np.testing.assert_array_equal(a.allocation, b.allocation)
 
 
-def test_controller_supply_scale_rebuilds_engine(pdn):
+def test_controller_supply_scale_repins_engine_no_recompile(pdn):
+    """A supply drop re-pins the existing engine's capacity arrays in place:
+    same engine object, no retrace of the compiled step program, and the new
+    caps are enforced from the next step (ISSUE 3 satellite)."""
+    from repro.core.engine import trace_count
+
     ctl = PowerController(pdn)
     rng = np.random.default_rng(14)
     tele = rng.uniform(200, 650, pdn.n)
     ctl.step(tele)
+    ctl.step(tele)  # compile both cold and warm-carry jit variants
     eng_before = ctl._engine
+    traces_before = trace_count()
     ctl.set_supply_scale(0.8)
     res = ctl.step(tele)
-    assert ctl._engine is not eng_before  # capacities are engine topology
+    assert ctl._engine is eng_before  # re-pinned, not rebuilt
+    assert trace_count() == traces_before  # caps are traced: no recompile
     csum = np.concatenate([[0.0], np.cumsum(res.allocation)])
     sums = csum[pdn.node_end] - csum[pdn.node_start]
     assert (sums <= 0.8 * pdn.node_cap + 1e-6).all()
+    # scales are absolute vs construction caps, not compounding
+    ctl.set_supply_scale(1.0)
+    res2 = ctl.step(tele)
+    np.testing.assert_allclose(
+        np.asarray(ctl._engine.fleet.tree.cap), pdn.node_cap
+    )
+    assert res2.allocation.sum() >= res.allocation.sum() - 1e-6
+
+
+def test_engine_reports_per_phase_iterations(pdn, sla_fleet):
+    """ISSUE 3 satellite: per-phase PDHG iteration split in engine stats
+    (groundwork for a per-phase deadline cost model).  On SLA fleets the
+    max-min phases run the LP path, so all three phases report work; the
+    split must sum to the total."""
+    layout, sla = sla_fleet
+    eng = AllocEngine(pdn, sla=sla, priority=layout.priority)
+    res = eng.step(np.random.default_rng(21).uniform(200, 650, pdn.n))
+    pi = res.stats["phase_iterations"]
+    assert len(pi) == 3
+    assert sum(pi) == res.stats["total_iterations"]
+    assert pi[0] > 0 and pi[1] > 0  # QP sweep + Phase II LP both iterate
+    # batched path reports the same split per scenario
+    bres = eng.step_batched(
+        np.random.default_rng(22).uniform(200, 650, (2, pdn.n))
+    )
+    assert bres.stats["iterations_per_phase"].shape == (2, 3)
+    np.testing.assert_array_equal(
+        bres.stats["iterations_per_phase"].sum(axis=1),
+        bres.stats["iterations"],
+    )
+
+
+def test_set_root_cap_fast_path_validates(pdn):
+    """set_root_cap skips the full repin revalidation (fleet hot path) but
+    still rejects grants below the subtree minimum draw."""
+    eng = AllocEngine(pdn)
+    with pytest.raises(ValueError, match="device minimums"):
+        eng.set_root_cap(10.0)
+    eng.set_root_cap(0.5 * pdn.node_cap[0])
+    assert float(np.asarray(eng.fleet.tree.cap)[0]) == 0.5 * pdn.node_cap[0]
+    res = eng.step(np.full(pdn.n, 650.0))
+    assert res.allocation.sum() <= 0.5 * pdn.node_cap[0] + 1e-6

@@ -120,3 +120,31 @@ def test_datacenter_sim_end_to_end(pdn):
     assert out["S_nvpax"].shape == (3,)
     assert (out["S_nvpax"] >= out["S_static"] - 1e-9).all()
     assert (out["straggler_tax"] < 0.05).all()
+
+
+def test_datacenter_sim_hoists_static_baseline(pdn, monkeypatch):
+    """ISSUE 3 satellite: ``static_allocate`` is request-independent, so the
+    simulator must compute it once per run, not once per step (it used to
+    dominate per-step host time at large n)."""
+    import repro.power.simulator as sim_mod
+
+    calls = {"n": 0}
+    real = sim_mod.static_allocate
+
+    def counting(p, requests=None):
+        calls["n"] += 1
+        return real(p, requests)
+
+    monkeypatch.setattr(sim_mod, "static_allocate", counting)
+    sim = DatacenterSim.build(pdn, seed=3)
+    out = sim.run(4)
+    assert out["S_static"].shape == (4,)
+    assert calls["n"] == 1
+
+
+def test_datacenter_sim_prefetch_matches_sync(pdn):
+    """Double-buffered telemetry ingestion changes wall time, not results."""
+    a = DatacenterSim.build(pdn, seed=5).run(3, prefetch=False)
+    b = DatacenterSim.build(pdn, seed=5).run(3, prefetch=True)
+    np.testing.assert_allclose(a["S_nvpax"], b["S_nvpax"], atol=1e-12)
+    np.testing.assert_allclose(a["S_greedy"], b["S_greedy"], atol=1e-12)
