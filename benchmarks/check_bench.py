@@ -1,0 +1,206 @@
+"""Bench artifact schema checks + regression gate (the CI bench-smoke job).
+
+    python benchmarks/check_bench.py [--dir artifacts/bench]
+        [--floors benchmarks/bench_floors.json] [--update-floors]
+
+Replaces the former copy-pasted inline schema checks in
+``.github/workflows/ci.yml`` with one gate that
+
+1. validates the schema of every ``BENCH_*.json`` artifact the suite
+   emits (``BENCH_engine.json`` and ``BENCH_fleet.json`` are required,
+   ``BENCH_sla_priorities.json`` is checked when present);
+2. asserts every recorded ``meets_*`` acceptance flag is still true
+   (parity, brownout coordination, zero-recompile churn, cross-domain
+   tenant SLA parity and minimum-honoring);
+3. gates numeric regressions: a gated metric (e.g. ``engine_speedup``)
+   failing below its recorded floor fails the job.
+
+``--update-floors`` ratchets: each gated metric's floor moves UP to
+``margin * current`` when the current run clears it, and never moves
+down — so perf wins are locked in while CI runner noise (the margin)
+does not flap the gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REQUIRED = ("BENCH_engine.json", "BENCH_fleet.json")
+OPTIONAL = ("BENCH_sla_priorities.json",)
+
+ENGINE_ROW_KEYS = (
+    "n_devices",
+    "rebuild_ms_mean",
+    "engine_cold_ms",
+    "engine_ms_mean",
+    "engine_speedup",
+    "engine_rebuild_max_dev_W",
+    "batched_solves_per_s",
+    "phase_iterations_mean",
+)
+
+FLEET_SECTIONS = ("perf", "brownout", "churn", "sla")
+
+FLEET_SLA_KEYS = (
+    "parity_total_dev_W",
+    "bound_violations",
+    "brownout_min_margin_W",
+    "min_honored_nvpax",
+    "min_violated_static",
+)
+
+
+def _fail(errors: list[str], msg: str) -> None:
+    errors.append(msg)
+    print(f"FAIL: {msg}")
+
+
+def check_engine(d: dict, errors: list[str], gated: dict[str, float]) -> None:
+    if not d.get("fleets"):
+        _fail(errors, "BENCH_engine.json: no fleet rows")
+        return
+    for row in d["fleets"]:
+        for key in ENGINE_ROW_KEYS:
+            if key not in row:
+                _fail(errors, f"BENCH_engine.json: row missing {key!r}")
+        if row.get("engine_rebuild_max_dev_W", 1.0) > 1e-9:
+            _fail(
+                errors,
+                "BENCH_engine.json: engine/rebuild parity "
+                f"{row.get('engine_rebuild_max_dev_W')} W > 1e-9",
+            )
+        if len(row.get("phase_iterations_mean", ())) != 3:
+            _fail(errors, "BENCH_engine.json: phase_iterations_mean != 3 phases")
+        gated[f"engine_speedup.n{row['n_devices']}"] = float(
+            row["engine_speedup"]
+        )
+
+
+def check_fleet(d: dict, errors: list[str], gated: dict[str, float]) -> None:
+    for key in FLEET_SECTIONS:
+        if key not in d:
+            _fail(errors, f"BENCH_fleet.json: missing section {key!r}")
+            return
+    missing = [key for key in FLEET_SLA_KEYS if key not in d["sla"]]
+    if missing:
+        for key in missing:
+            _fail(errors, f"BENCH_fleet.json: sla section missing {key!r}")
+        return
+    for flag in sorted(k for k in d if k.startswith("meets_")):
+        if not d[flag]:
+            _fail(errors, f"BENCH_fleet.json: acceptance flag {flag} is false")
+    gated["fleet.S_brownout"] = float(d["brownout"]["S_fleet_mean"])
+    gated["fleet.sla_min_margin_nvpax_W"] = float(
+        d["sla"]["brownout_min_margin_W"]["nvpax"]
+    )
+
+
+def check_sla_priorities(d: dict, errors: list[str], gated: dict[str, float]) -> None:
+    for key in ("S_global_mean", "sla_margin_mean", "violations"):
+        if key not in d:
+            _fail(errors, f"BENCH_sla_priorities.json: missing {key!r}")
+            return
+    if d["violations"] != 0:
+        _fail(
+            errors,
+            f"BENCH_sla_priorities.json: {d['violations']} SLA violations "
+            "(paper reports zero)",
+        )
+    gated["sla_priorities.S_global_mean"] = float(d["S_global_mean"])
+
+
+# floor ratchet margins per metric prefix: how much of the current value a
+# new floor locks in (CI runner noise headroom)
+MARGINS = {
+    "engine_speedup": 0.3,
+    "fleet.S_brownout": 0.95,
+    "fleet.sla_min_margin_nvpax_W": 0.0,  # >= 0 is the contract, not perf
+    "sla_priorities.S_global_mean": 0.98,
+}
+
+
+def _margin(name: str) -> float:
+    for prefix, m in MARGINS.items():
+        if name.startswith(prefix):
+            return m
+    return 0.9
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/bench")
+    ap.add_argument(
+        "--floors",
+        default=os.path.join(os.path.dirname(__file__), "bench_floors.json"),
+    )
+    ap.add_argument(
+        "--update-floors", action="store_true",
+        help="ratchet floors up from the current run (never down)",
+    )
+    args = ap.parse_args()
+
+    errors: list[str] = []
+    gated: dict[str, float] = {}
+    checkers = {
+        "BENCH_engine.json": check_engine,
+        "BENCH_fleet.json": check_fleet,
+        "BENCH_sla_priorities.json": check_sla_priorities,
+    }
+    for name in REQUIRED + OPTIONAL:
+        path = os.path.join(args.dir, name)
+        if not os.path.exists(path):
+            if name in REQUIRED:
+                _fail(errors, f"missing required artifact {path}")
+            continue
+        with open(path) as f:
+            data = json.load(f)
+        try:
+            checkers[name](data, errors, gated)
+        except (KeyError, TypeError, ValueError) as e:
+            # malformed artifact: report it as a check failure, keep going
+            # so the remaining artifacts and floors still get checked
+            _fail(errors, f"{name}: malformed artifact ({type(e).__name__}: {e})")
+
+    floors: dict[str, float] = {}
+    if os.path.exists(args.floors):
+        with open(args.floors) as f:
+            floors = json.load(f)
+
+    for name, floor in sorted(floors.items()):
+        if name not in gated:
+            continue  # metric not emitted by this run's artifact subset
+        if gated[name] < floor:
+            _fail(
+                errors,
+                f"regression: {name} = {gated[name]:.4g} fell below its "
+                f"recorded floor {floor:.4g}",
+            )
+
+    if args.update_floors:
+        changed = False
+        for name, value in sorted(gated.items()):
+            new = _margin(name) * value
+            if new > floors.get(name, float("-inf")):
+                floors[name] = round(new, 6)
+                changed = True
+        if changed:
+            with open(args.floors, "w") as f:
+                json.dump(floors, f, indent=1, sort_keys=True)
+                f.write("\n")
+            print(f"updated floors -> {args.floors}")
+
+    if errors:
+        print(f"\n{len(errors)} bench check(s) failed")
+        return 1
+    print("bench checks ok:")
+    for name, value in sorted(gated.items()):
+        mark = f" (floor {floors[name]:.4g})" if name in floors else ""
+        print(f"  {name} = {value:.4g}{mark}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

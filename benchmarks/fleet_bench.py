@@ -14,7 +14,12 @@ consumed by CI's bench-smoke job:
   (locally enforced, so it stays feasible under the derated caps) and
   Greedy on the derated PDN (acceptance: beats static);
 * ``churn`` — device leave/rejoin re-pins on the stacked dispatch: wall
-  time and retrace counts (acceptance: zero recompiles).
+  time and retrace counts (acceptance: zero recompiles);
+* ``sla`` — cross-domain tenant SLA enforcement (ISSUE 4): (a) total-power
+  parity of the fleet-with-cross-cut-tenants solve vs the monolithic SLA
+  engine on the same PDN (acceptance: <= 1e-6 W), and (b) a brownout trace
+  where nvPAX honors every tenant's contractual minimum while static
+  equal-share and greedy violate it.
 
     PYTHONPATH=src python benchmarks/fleet_bench.py [--smoke|--full] \
         [--out artifacts/bench]
@@ -31,11 +36,13 @@ from repro.core import engine as engine_mod
 from repro.core.engine import AllocEngine
 from repro.core.greedy import greedy_allocate
 from repro.core.metrics import satisfaction_ratio
-from repro.core.nvpax import optimize
+from repro.core.nvpax import NvpaxOptions, optimize
+from repro.core.pdhg import SolverOptions
 from repro.core.problem import AllocProblem
 from repro.fleet import FleetLifecycle, FleetOrchestrator
 from repro.fleet import orchestrator as orch_mod
 from repro.pdn.hierarchy_gen import homogeneous_fleet
+from repro.pdn.tenants import assign_cross_domain_tenants
 
 # (n_domains, racks_per_domain, servers_per_rack, gpus_per_server)
 GEOMETRIES = {
@@ -208,17 +215,127 @@ def bench_churn(geom, seed: int = 2) -> dict:
     }
 
 
-def run(geom, *, perf_steps: int = 5, brownout_steps: int = 8) -> dict:
+def bench_sla(geom, steps: int = 3, seed: int = 3,
+              brownout_scale: float = 0.6) -> dict:
+    """Cross-domain tenant SLA enforcement vs the monolithic SLA engine.
+
+    *Parity*: slack node caps (only device boxes and tenant rows bind — the
+    regime where both solves land exactly on the binding rows) under a hot
+    trace with every tenant maximum binding; fleet total power must match
+    the monolithic engine to <= 1e-6 W.  Phase II's max-min LP reaches its
+    vertex long before PDHG can certify KKT on the eps-degenerate tenant
+    programs, so the solves run with a capped iteration budget (allocation
+    quality is what is scored, and the parity bound asserts it).
+
+    *Brownout*: binding domain caps, one cross-cut tenant with a high
+    contractual minimum; domain 0's feed derates mid-trace.  nvPAX must
+    honor the minimum every step (the coordinator raises the derated
+    domain's grant floor and reroutes the entitlement to the surviving
+    slices) while static equal-share and greedy — which know nothing about
+    contracts — violate it.
+    """
+    K, racks, servers, gpus = geom
+    opts = NvpaxOptions(solver=SolverOptions(max_iters=2000))
+
+    # -- parity vs monolithic SLA engine ------------------------------------
+    pdn = homogeneous_fleet(
+        K, racks_per_domain=racks, servers_per_rack=servers,
+        gpus_per_server=gpus, domain_oversub=1.15, root_oversub=1.0,
+    )
+    # uniform priorities: the parity claim scores SLA enforcement (priority
+    # sweeps are scored by benchmarks/sla_priorities.py); mixing priority
+    # levels adds warm-started QP stalls that wobble BOTH solves ~1 W at
+    # the capped iteration budget
+    lay = assign_cross_domain_tenants(
+        pdn, 1, hi_frac=0.55, priorities=(1,), seed=seed
+    )
+    mono = AllocEngine(
+        pdn, sla=lay.sla_topo(), priority=lay.priority, options=opts
+    )
+    orch = FleetOrchestrator(
+        pdn, level=1, coordinator_mode="subtree", tenants=lay, options=opts
+    )
+    rng = np.random.default_rng(seed)
+    parity, viol = 0.0, 0
+    fleet_ms = []
+    for _ in range(steps):
+        tele = rng.uniform(600, 690, pdn.n)
+        rm = mono.step(tele)
+        t0 = time.perf_counter()
+        rf = orch.step(tele)
+        fleet_ms.append(1000 * (time.perf_counter() - t0))
+        parity = max(parity, abs(float(rm.allocation.sum() - rf.allocation.sum())))
+        for t in range(lay.n_tenants):
+            s = rf.allocation[lay.tenant_of == t].sum()
+            viol += int(s < lay.b_min[t] - 1e-4) + int(s > lay.b_max[t] + 1e-4)
+
+    # -- brownout: contractual minimums through a derate ---------------------
+    pdn_b = homogeneous_fleet(
+        K, racks_per_domain=racks, servers_per_rack=servers,
+        gpus_per_server=gpus, root_oversub=1.0,
+    )
+    lay_b = assign_cross_domain_tenants(
+        pdn_b, 1, n_cross=1, n_local_per_domain=0,
+        per_domain=max(2, gpus // 2), lo_frac=0.7, hi_frac=0.9, seed=seed,
+    )
+    orch_b = FleetOrchestrator(pdn_b, level=1, tenants=lay_b, options=opts)
+    rng = np.random.default_rng(seed + 1)
+    t_of = lay_b.tenant_of
+    b_min = float(lay_b.b_min[0])
+    worst = {"nvpax": np.inf, "static": np.inf, "greedy": np.inf}
+    derated = pdn_b.node_cap.copy()
+    for t in range(steps * 2):
+        tele = rng.uniform(600, 690, pdn_b.n)
+        if t == steps:
+            orch_b.set_domain_supply(0, brownout_scale)
+            derated[orch_b.partition.domains[0].node_lo] *= brownout_scale
+        res = orch_b.step(tele)
+        worst["nvpax"] = min(worst["nvpax"], res.allocation[t_of == 0].sum() - b_min)
+        worst["static"] = min(
+            worst["static"],
+            _static_fleet_allocate(pdn_b, orch_b)[t_of == 0].sum() - b_min,
+        )
+        pdn_now = dataclasses.replace(pdn_b, node_cap=derated)
+        worst["greedy"] = min(
+            worst["greedy"],
+            greedy_allocate(pdn_now, tele)[t_of == 0].sum() - b_min,
+        )
+    return {
+        "n_devices": pdn.n,
+        "n_tenants": lay.n_tenants,
+        "n_cross_cut": int(np.asarray(
+            orch.partition.sla.cross).sum()),
+        "steps": steps,
+        "parity_total_dev_W": parity,
+        "bound_violations": viol,
+        "fleet_sla_ms_mean": float(np.mean(fleet_ms)),
+        "brownout_min_margin_W": {k: float(v) for k, v in worst.items()},
+        "min_honored_nvpax": bool(worst["nvpax"] >= -1e-4),
+        "min_violated_static": bool(worst["static"] < -1e-4),
+        "min_violated_greedy": bool(worst["greedy"] < -1e-4),
+    }
+
+
+def run(geom, *, perf_steps: int = 5, brownout_steps: int = 8,
+        sla_steps: int = 3) -> dict:
     perf = bench_perf(geom, steps=perf_steps)
     brown = bench_brownout(geom, steps=brownout_steps)
     churn = bench_churn(geom)
+    sla = bench_sla(geom, steps=sla_steps)
     return {
         "perf": perf,
         "brownout": brown,
         "churn": churn,
+        "sla": sla,
         "meets_parity_1e6": bool(perf["parity_total_dev_W"] <= 1e-6),
         "meets_beats_static": bool(brown["beats_static"]),
         "meets_zero_retrace_churn": bool(churn["fleet_retraces"] == 0),
+        "meets_sla_parity_1e6": bool(
+            sla["parity_total_dev_W"] <= 1e-6 and sla["bound_violations"] == 0
+        ),
+        "meets_sla_min_honored": bool(
+            sla["min_honored_nvpax"] and sla["min_violated_static"]
+        ),
     }
 
 
@@ -246,7 +363,7 @@ def main() -> None:
     path = os.path.join(args.out, "BENCH_fleet.json")
     with open(path, "w") as f:
         json.dump(res, f, indent=1)
-    p, b, c = res["perf"], res["brownout"], res["churn"]
+    p, b, c, s = res["perf"], res["brownout"], res["churn"], res["sla"]
     print(
         f"perf n={p['n_devices']} K={p['n_domains']}: rebuild "
         f"{p['rebuild_ms_mean']:.1f}ms, mono {p['mono_engine_ms_mean']:.1f}ms, "
@@ -263,6 +380,14 @@ def main() -> None:
         f"churn: repin {c['repin_ms']:.2f}ms, post-churn step "
         f"{c['post_churn_step_ms']:.1f}ms, retraces fleet={c['fleet_retraces']} "
         f"engine={c['engine_retraces']}", flush=True,
+    )
+    print(
+        f"sla: {s['n_tenants']} tenants ({s['n_cross_cut']} cross-cut), "
+        f"parity {s['parity_total_dev_W']:.2e} W, violations "
+        f"{s['bound_violations']}; brownout min margins "
+        f"nvpax {s['brownout_min_margin_W']['nvpax']:.1f} W vs static "
+        f"{s['brownout_min_margin_W']['static']:.1f} W / greedy "
+        f"{s['brownout_min_margin_W']['greedy']:.1f} W", flush=True,
     )
     print(f"wrote {path}")
 

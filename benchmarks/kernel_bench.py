@@ -36,7 +36,10 @@ def run() -> dict:
     # pdhg_update correctness + ref timing at fleet scale
     n = 100_000
     rng = np.random.default_rng(0)
-    mk = lambda: jnp.asarray(rng.normal(size=n), jnp.float32)
+
+    def mk():
+        return jnp.asarray(rng.normal(size=n), jnp.float32)
+
     x, gx, c, w, tg = mk(), mk(), mk(), jnp.abs(mk()), mk()
     lo, hi = mk() - 3, mk() + 3
     tau = jnp.float32(0.3)

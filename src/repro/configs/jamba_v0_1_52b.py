@@ -7,8 +7,6 @@ layers use our SSD (mamba-2) block — hardware adaptation recorded in
 DESIGN.md.  Hybrid 1:7 attention => sub-quadratic; long_500k RUNS.
 """
 
-import jax.numpy as jnp
-
 from repro.configs.base import ArchConfig
 
 CONFIG = ArchConfig(

@@ -147,7 +147,10 @@ def stack_problems(aps: Sequence[AllocProblem]) -> AllocProblem:
                 continue
             if a.shape != b.shape or not bool(np.array_equal(np.asarray(a), np.asarray(b))):
                 raise ValueError(f"scenario {i} differs from scenario 0 in {name}")
-    stk = lambda leaf: jnp.stack([getattr(ap, leaf) for ap in aps])
+
+    def stk(leaf):
+        return jnp.stack([getattr(ap, leaf) for ap in aps])
+
     return ref._replace(
         l=stk("l"),
         u=stk("u"),
@@ -277,7 +280,12 @@ def _maxmin_loop(
             st.solver.y_imp,
         )
         solver, stats = pdhg.solve(prob, ap.tree, ap.sla, solver, opts)
-        x_new = phases.repair(solver.x, ap, meta.n_depths)
+        # monotone non-decrease on non-free devices: the dualized
+        # improvement rows guarantee it only at convergence, so enforce it
+        # against truncated solves (mirrors phases.run_maxmin_phase; keeps
+        # Phase I's tenant minimums intact through stalled LP rounds)
+        x_cand = jnp.where(free_set, solver.x, jnp.maximum(solver.x, st.x))
+        x_new = phases.repair(x_cand, ap, meta.n_depths)
         sat = phases.saturated_mask(x_new, ap, st.mask)
         # host driver: stop when no measurable head-room is left AND nothing
         # newly saturated needs freezing

@@ -43,7 +43,6 @@ new engine.  :class:`repro.power.PowerController` and
 from __future__ import annotations
 
 import contextlib
-import functools
 import time
 from typing import Any
 
@@ -136,6 +135,7 @@ class AllocEngine:
         idle_threshold: float = 150.0,
         normalized: bool = False,
         dtype=jnp.float64,
+        pin_free: bool | None = None,
     ):
         self.pdn = pdn
         self.options = options or NvpaxOptions()
@@ -153,7 +153,12 @@ class AllocEngine:
                 raise ValueError("priorities must be >= 1")
             self.priority = jnp.asarray(self.priority_np)
         sla_t = self.fleet.sla
-        pin_free = sla_t.k == 0 or not bool((np.asarray(sla_t.lo) > 0).any())
+        if pin_free is None:
+            # auto: safe iff no tenant minimum can force a pinned-free
+            # device upward.  Callers that re-pin SLA lower bounds at
+            # runtime (set_sla_bounds with lo > 0 later) must pass False —
+            # pin_free is compiled-in metadata (paper 4.3.1).
+            pin_free = sla_t.k == 0 or not bool((np.asarray(sla_t.lo) > 0).any())
         # levels from the full priority layout (not the per-step active set):
         # the Phase I scan skips empty levels with a traced cond, so the
         # compiled program is pinned while per-step semantics match the host
@@ -273,6 +278,40 @@ class AllocEngine:
                     cap=jnp.asarray(self._node_cap_np, self.dtype)
                 )
             )
+        if reset_warm:
+            self.reset_warm()
+
+    def set_sla_bounds(
+        self,
+        lo: np.ndarray,
+        hi: np.ndarray,
+        *,
+        reset_warm: bool = False,
+    ) -> None:
+        """Re-pin the tenant SLA aggregate bounds on the pinned program.
+
+        The fleet coordinator's per-step hot path for cross-cut tenant
+        sub-budgets: bounds are traced values (the incidence structure is
+        static), so grants change with zero recompiles.  Carries warm state
+        by default — the SLA duals track drifting sub-budgets well.
+        """
+        lo = np.asarray(lo, np.float64)
+        hi = np.asarray(hi, np.float64)
+        k = int(self.fleet.sla.lo.shape[0])
+        if lo.shape != (k,) or hi.shape != (k,):
+            raise ValueError(f"sla bounds shapes {lo.shape}/{hi.shape} != ({k},)")
+        if (lo > hi + 1e-9).any():
+            raise ValueError("sla bounds must satisfy lo <= hi")
+        if self.meta.pin_free and (lo > 0).any():
+            # the compiled program pins free devices at l (paper 4.3.1),
+            # which is unsound once a tenant minimum can force them upward
+            raise ValueError(
+                "engine was compiled with the pin-free simplification "
+                "(no positive SLA lower bounds at construction); rebuild "
+                "the engine to raise tenant minimums above zero"
+            )
+        with self._ctx():
+            self.fleet = self.fleet.with_sla_bounds(lo, hi, self.dtype)
         if reset_warm:
             self.reset_warm()
 

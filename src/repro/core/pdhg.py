@@ -213,7 +213,10 @@ def kkt_residuals(state: SolverState, prob: StepProblem, tree: TreeTopo, sla: Sl
     p_tree = _viol(kx_tree, -inf, prob.tree_hi)
     p_sla = _viol(kx_sla, prob.sla_lo, prob.sla_hi) if sla.k else jnp.zeros((0,), x.dtype)
     p_imp = _viol(kx_imp, prob.imp_lo, inf)
-    pmax = lambda v: (jnp.max(v) if v.shape[0] else jnp.asarray(0.0, x.dtype))
+
+    def pmax(v):
+        return jnp.max(v) if v.shape[0] else jnp.asarray(0.0, x.dtype)
+
     primal = jnp.maximum(jnp.maximum(pmax(p_tree), pmax(p_sla)), pmax(p_imp))
     p_scale = 1.0 + jnp.maximum(
         jnp.max(jnp.abs(kx_tree)),
@@ -499,7 +502,10 @@ def solve(
 
         x, t, yt, ys, yi, om = lax.cond(do_restart, restart, no_restart, (x, t, yt, ys, yi, om))
         reset = do_restart
-        zf = lambda arr: jnp.where(reset, jnp.zeros_like(arr), arr)
+
+        def zf(arr):
+            return jnp.where(reset, jnp.zeros_like(arr), arr)
+
         return Carry(
             x=x, t=t, y_tree=yt, y_sla=ys, y_imp=yi, omega=om,
             ax=zf(ax), at=zf(at_), ayt=zf(ayt), ays=zf(ays), ayi=zf(ayi),

@@ -353,7 +353,13 @@ def run_maxmin_phase(
         prob = lp_step(ap, x, mask_a, mask_f, free_set, eps)
         state = pdhg.SolverState(x, jnp.zeros((), dtype), state.y_tree, state.y_sla, state.y_imp)
         state, stats = pdhg.solve(prob, ap.tree, ap.sla, state, opts)
-        x_new = repair(state.x, ap, n_depths)
+        # The exact max-min iteration never moves a non-free device below
+        # its round-entry value (improvement rows force x >= base + t,
+        # t >= 0), but those rows are dualized: a truncated solve can leave
+        # the primal below base, silently destroying tenant minimums that
+        # Phase I enforced.  Clamp to the invariant before the repair.
+        x_cand = jnp.where(free_set, state.x, jnp.maximum(state.x, x))
+        x_new = repair(x_cand, ap, n_depths)
         solves += 1
         iters += int(stats.iterations)
         conv &= bool(stats.converged)

@@ -56,6 +56,27 @@ class FleetTopology(NamedTuple):
     def n(self) -> int:
         return self.l.shape[0]
 
+    def with_sla_bounds(self, lo, hi, dtype=None) -> "FleetTopology":
+        """Same topology with re-pinned tenant SLA row bounds.
+
+        The SLA *structure* (incidence edges) is static engine metadata; the
+        aggregate ``[lo, hi]`` rows are traced values, so swapping them
+        re-pins a compiled engine without recompiling — the fleet
+        coordinator's per-step tenant sub-budget path
+        (:meth:`repro.core.engine.AllocEngine.set_sla_bounds`).
+        """
+        import jax.numpy as jnp
+
+        dtype = dtype or self.sla.lo.dtype
+        lo = jnp.asarray(lo, dtype)
+        hi = jnp.asarray(hi, dtype)
+        if lo.shape != self.sla.lo.shape or hi.shape != self.sla.hi.shape:
+            raise ValueError(
+                f"sla bounds shapes {lo.shape}/{hi.shape} != "
+                f"({self.sla.k},) (structure is static; rebuild the engine)"
+            )
+        return self._replace(sla=self.sla._replace(lo=lo, hi=hi))
+
     @classmethod
     def from_pdn(
         cls,

@@ -14,10 +14,16 @@ engines coordinated by an inter-domain budget planner:
   join/leave, supply derating) and double-buffered telemetry ingestion.
 """
 
-from repro.fleet.coordinator import BudgetCoordinator
+from repro.fleet.coordinator import BudgetCoordinator, split_entitlements
 from repro.fleet.lifecycle import FleetLifecycle, TelemetryDoubleBuffer
 from repro.fleet.orchestrator import FleetOrchestrator, FleetStepResult
-from repro.fleet.partition import DomainSpec, FleetPartition, split_pdn
+from repro.fleet.partition import (
+    DomainSpec,
+    FleetPartition,
+    FleetSla,
+    build_fleet_sla,
+    split_pdn,
+)
 
 __all__ = [
     "BudgetCoordinator",
@@ -25,7 +31,10 @@ __all__ = [
     "FleetLifecycle",
     "FleetOrchestrator",
     "FleetPartition",
+    "FleetSla",
     "FleetStepResult",
     "TelemetryDoubleBuffer",
+    "build_fleet_sla",
+    "split_entitlements",
     "split_pdn",
 ]

@@ -27,6 +27,19 @@ When nothing above the cut binds (``sum(cap_k)`` within every ancestor
 cap), the headroom pass raises every grant to ``cap_k`` — each domain gets
 its full subtree budget and the fleet solve is exactly the monolithic
 solve (parity asserted in ``tests/test_fleet.py``).
+
+With cross-cut tenants (a :class:`repro.fleet.partition.FleetSla` on the
+partition), :meth:`BudgetCoordinator.plan_sla` additionally enforces
+*tenant entitlements* at the coordinator level every step: each cross-cut
+tenant's contractual ``[b_min, b_max]`` is split into per-domain slice
+sub-budgets by a small jitted water-filling projection (tenants are the
+"nodes" of a one-level forest over their slices), domain grant floors are
+raised so every feed simultaneously respects the above-cut caps AND funds
+every tenant's minimum, and the excess is split by the existing headroom
+pass.  The sub-budgets are handed to the per-domain engines as ordinary
+SLA boxes, keeping contract enforcement on the per-step hot path rather
+than as an offline admission test (cf. CloudPowerCap's coordinator-level
+reconciliation, arXiv:1403.1289).
 """
 
 from __future__ import annotations
@@ -34,10 +47,117 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.waterfill import waterfill_arrays
-from repro.fleet.partition import FleetPartition
+from repro.fleet.partition import FleetPartition, FleetSla
 from repro.pdn.tree import check_caps_fund_minimums
 
-__all__ = ["BudgetCoordinator"]
+__all__ = ["BudgetCoordinator", "check_tenants_deliverable", "split_entitlements"]
+
+
+def check_tenants_deliverable(
+    sla: FleetSla,
+    slice_floor: np.ndarray,
+    slice_umax: np.ndarray,
+    tol: float = 1e-9,
+) -> None:
+    """Every cross-cut tenant's contract must be deliverable by its slices:
+    ``sum(umax) >= b_min`` (the minimum can be funded at all) and
+    ``sum(floor) <= b_max`` (the slices' own floors do not bust the
+    maximum).  Shared by the per-step plan and by every orchestrator
+    mutation path (churn, derates, grant changes), so violations surface at
+    the mutation boundary, not one step later."""
+    csf = np.concatenate([[0.0], np.cumsum(np.asarray(slice_floor, np.float64))])
+    csu = np.concatenate([[0.0], np.cumsum(np.asarray(slice_umax, np.float64))])
+    floor_t = csf[sla.ten_end] - csf[sla.ten_start]
+    umax_t = csu[sla.ten_end] - csu[sla.ten_start]
+    b_min_t = sla.b_min[sla.cross_ids]
+    b_max_t = sla.b_max[sla.cross_ids]
+    bad = np.nonzero(umax_t < b_min_t - tol)[0]
+    if bad.size:
+        i = int(bad[0])
+        raise ValueError(
+            f"cross-cut tenant {int(sla.cross_ids[i])} minimum "
+            f"{b_min_t[i]:.1f} W exceeds its slices' deliverable maximum "
+            f"{umax_t[i]:.1f} W; restore devices or relax the SLA"
+        )
+    bad = np.nonzero(floor_t > b_max_t + tol)[0]
+    if bad.size:
+        i = int(bad[0])
+        raise ValueError(
+            f"cross-cut tenant {int(sla.cross_ids[i])} slice floors "
+            f"{floor_t[i]:.1f} W exceed its contractual maximum "
+            f"{b_max_t[i]:.1f} W"
+        )
+
+
+def _entitlement_split_jit():
+    """Build (once) the jitted slice-splitting projection."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.treeops import TreeTopo
+    from repro.core.waterfill import waterfill_jax
+
+    @jax.jit
+    def split(floor, umax, demand, start, end, b_min, b_max):
+        mask = jnp.ones(floor.shape[0], bool)
+        zeros = jnp.zeros(start.shape[0], jnp.int32)
+        forest_min = TreeTopo(start=start, end=end, cap=b_min, depth=zeros)
+        forest_max = TreeTopo(start=start, end=end, cap=b_max, depth=zeros)
+        # minimum split: demand-free max-min raise of the slice floors until
+        # each tenant row reaches b_min (stable across steps, so churn
+        # validation agrees with the next plan exactly)
+        lo = waterfill_jax(floor, mask, forest_min, umax)
+        # maximum split: demand-shaped first (hot slices get budget), then
+        # headroom so the sub-budgets always sum to min(b_max, sum(umax))
+        hi = waterfill_jax(lo, mask, forest_max, jnp.clip(demand, lo, umax))
+        hi = waterfill_jax(hi, mask, forest_max, umax)
+        return lo, hi
+
+    return split
+
+
+_SPLIT = None
+
+
+def split_entitlements(
+    sla: FleetSla,
+    slice_floor: np.ndarray,
+    slice_umax: np.ndarray,
+    slice_demand: np.ndarray,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Split every cross-cut tenant's ``[b_min, b_max]`` into per-slice
+    sub-budgets ``[lo_s, hi_s]`` (one jitted water-filling projection).
+
+    Guarantees, per cross-cut tenant ``t`` with slices ``S_t``:
+
+    * ``floor_s <= lo_s <= hi_s <= umax_s`` for every slice;
+    * ``sum(lo_s) = max(b_min_t, sum(floor_s))`` (clipped at what the
+      slices can deliver) — so domains that enforce their slice ``lo``
+      jointly honor the tenant's contractual minimum;
+    * ``sum(hi_s) = min(b_max_t, sum(umax_s))`` — so domains that cap at
+      their slice ``hi`` jointly honor the contractual maximum, with the
+      budget steered toward the slices that request it (``slice_demand``).
+    """
+    global _SPLIT
+    if sla.n_slices == 0:
+        return np.zeros(0), np.zeros(0)
+    if _SPLIT is None:
+        _SPLIT = _entitlement_split_jit()
+    import jax.numpy as jnp
+
+    from repro.compat import enable_x64
+
+    with enable_x64(True):
+        lo, hi = _SPLIT(
+            jnp.asarray(slice_floor, jnp.float64),
+            jnp.asarray(slice_umax, jnp.float64),
+            jnp.asarray(slice_demand, jnp.float64),
+            jnp.asarray(sla.ten_start),
+            jnp.asarray(sla.ten_end),
+            jnp.asarray(sla.b_min[sla.cross_ids], jnp.float64),
+            jnp.asarray(sla.b_max[sla.cross_ids], jnp.float64),
+        )
+        return np.asarray(lo), np.asarray(hi)
 
 _MODES = ("waterfill", "subtree", "static")
 
@@ -103,6 +223,18 @@ class BudgetCoordinator:
         dcap = self.domain_cap if domain_cap is None else np.asarray(domain_cap)
         ccap = self.cap if coord_cap is None else np.asarray(coord_cap)
         dmin = self.domain_min if domain_min is None else np.asarray(domain_min)
+        dn = self.domain_n if domain_n is None else np.asarray(domain_n)
+        return self._grants(demand, dmin, dcap, ccap, dn)
+
+    def _grants(
+        self,
+        demand: np.ndarray,
+        dmin: np.ndarray,
+        dcap: np.ndarray,
+        ccap: np.ndarray,
+        dn: np.ndarray,
+    ) -> np.ndarray:
+        """Demand + headroom waterfill passes over validated floors."""
         if (dmin > dcap + 1e-9).any():
             k = int(np.nonzero(dmin > dcap + 1e-9)[0][0])
             raise ValueError(
@@ -119,13 +251,76 @@ class BudgetCoordinator:
         if self.mode == "waterfill":
             grants = self._fill(grants, np.clip(demand, dmin, dcap), ccap)
         elif self.mode == "static":
-            dn = self.domain_n if domain_n is None else np.asarray(domain_n)
             share = ccap[0] / max(int(dn.sum()), 1)
             grants = self._fill(grants, np.clip(share * dn, dmin, dcap), ccap)
             return grants  # static never redistributes leftover headroom
         # headroom pass (waterfill + subtree modes)
         grants = self._fill(grants, dcap, ccap)
         return grants
+
+    def plan_sla(
+        self,
+        demand: np.ndarray,
+        *,
+        sla: FleetSla,
+        slice_floor: np.ndarray,
+        slice_umax: np.ndarray,
+        slice_demand: np.ndarray,
+        local_lift: np.ndarray | None = None,
+        domain_cap: np.ndarray | None = None,
+        coord_cap: np.ndarray | None = None,
+        domain_min: np.ndarray | None = None,
+        domain_n: np.ndarray | None = None,
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Budget rebalance WITH tenant entitlement rows (the SLA hot path).
+
+        Returns ``(grants, slice_lo, slice_hi)``: per-domain budget grants
+        plus per-slice sub-budgets for every cross-cut tenant (see
+        :func:`split_entitlements`).  ``slice_floor``/``slice_umax``/
+        ``slice_demand`` are the current per-slice aggregates (sums of the
+        slice devices' ``l``/``u``/shaped requests); ``local_lift`` is each
+        domain's extra minimum draw from its *domain-local* tenant minimums
+        (``sum_t max(b_min_t - floor_t, 0)``).
+
+        Domain grant floors are raised by the tenant lifts, so the returned
+        grants simultaneously respect every above-cut capacity row and fund
+        every cross-cut tenant's contractual minimum; the excess is split by
+        the same demand/headroom passes as the SLA-free plan.  Raises
+        ``ValueError`` when a tenant minimum is no longer deliverable (its
+        slices' capacity sum fell below ``b_min``, e.g. after masking too
+        many of its devices out) or a contractual maximum is below the
+        slices' floor sum.
+        """
+        demand = np.asarray(demand, np.float64)
+        if demand.shape != (self.k,):
+            raise ValueError(f"demand shape {demand.shape} != ({self.k},)")
+        slice_floor = np.asarray(slice_floor, np.float64)
+        slice_umax = np.asarray(slice_umax, np.float64)
+        slice_demand = np.asarray(slice_demand, np.float64)
+        S = sla.n_slices
+        for arr, name in (
+            (slice_floor, "slice_floor"),
+            (slice_umax, "slice_umax"),
+            (slice_demand, "slice_demand"),
+        ):
+            if arr.shape != (S,):
+                raise ValueError(f"{name} shape {arr.shape} != ({S},)")
+        dcap = self.domain_cap if domain_cap is None else np.asarray(domain_cap)
+        ccap = self.cap if coord_cap is None else np.asarray(coord_cap)
+        dmin = self.domain_min if domain_min is None else np.asarray(domain_min)
+        dn = self.domain_n if domain_n is None else np.asarray(domain_n)
+        # per-tenant deliverability before splitting anything
+        check_tenants_deliverable(sla, slice_floor, slice_umax)
+        slice_lo, slice_hi = split_entitlements(
+            sla, slice_floor, slice_umax, slice_demand
+        )
+        lift = np.zeros(self.k)
+        if S:
+            np.add.at(lift, sla.slice_domain, slice_lo - slice_floor)
+        if local_lift is not None:
+            lift = lift + np.asarray(local_lift, np.float64)
+        grants = self._grants(demand, dmin + lift, dcap, ccap, dn)
+        return grants, slice_lo, slice_hi
 
     def check(self, grants: np.ndarray, coord_cap: np.ndarray | None = None,
               tol: float = 1e-6) -> None:

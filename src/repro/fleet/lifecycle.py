@@ -54,20 +54,34 @@ class FleetLifecycle:
         """Mask devices out of allocation (zero-width box, zero floor).
 
         Re-pins only the affected domains; compiled programs and the other
-        domains' warm state are untouched.
+        domains' warm state are untouched.  The whole batch is validated
+        first — notably that every cross-cut tenant's contractual minimum
+        stays deliverable by its remaining devices — so a rejected leave
+        records nothing and masks nothing.
         """
         by_domain: dict[int, list[int]] = {}
         for d in np.atleast_1d(np.asarray(devices, np.int64)):
             k, i = self._locate(int(d))
             by_domain.setdefault(k, []).append(i)
+        masked: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        dev_l = list(self.orch._dev_l)
+        dev_u = list(self.orch._dev_u)
         for k, idxs in by_domain.items():
             l = self.orch._dev_l[k].copy()
             u = self.orch._dev_u[k].copy()
-            for i in idxs:
+            l[idxs] = 0.0
+            u[idxs] = 0.0
+            masked[k] = (l, u)
+            dev_l[k] = l
+            dev_u[k] = u
+        self.orch._check_effective_floors(dev_l=dev_l, dev_u=dev_u)
+        for k, (l, u) in masked.items():
+            for i in by_domain[k]:
                 if (k, i) not in self._left:
-                    self._left[(k, i)] = (float(l[i]), float(u[i]))
-                l[i] = 0.0
-                u[i] = 0.0
+                    self._left[(k, i)] = (
+                        float(self.orch._dev_l[k][i]),
+                        float(self.orch._dev_u[k][i]),
+                    )
             self.orch.repin_domain(k, dev_l=l, dev_u=u)
 
     def device_join(self, devices) -> None:
@@ -99,14 +113,15 @@ class FleetLifecycle:
                 what=f"rejoin into domain {k}: node",
             )
             restored[k] = (l, u)
-        # the full batch's raised floors must fit under the derated feeds,
-        # else a per-domain repin partway through could fail mid-batch
-        dmin_all = np.array(
-            [self.orch._dev_l[j].sum() for j in range(self.orch.k)]
-        )
-        for k, (l, _) in restored.items():
-            dmin_all[k] = l.sum()
-        self.orch._check_effective_floors(dmin_all)
+        # the full batch's raised floors (device minimums + tenant minimum
+        # lifts) must fit under the derated feeds, else a per-domain repin
+        # partway through could fail mid-batch
+        dev_l = list(self.orch._dev_l)
+        dev_u = list(self.orch._dev_u)
+        for k, (l, u) in restored.items():
+            dev_l[k] = l
+            dev_u[k] = u
+        self.orch._check_effective_floors(dev_l=dev_l, dev_u=dev_u)
         for k, (l, u) in restored.items():
             for i in by_domain[k]:
                 del self._left[(k, i)]

@@ -34,10 +34,17 @@ Warm starts are carried per domain in both modes (a batched
 :class:`repro.core.phases.WarmCarry` with ``[K, ...]`` leaves, or each
 engine's own carry); churn resets only the affected domain's carry.
 
-Tenant SLAs are currently monolithic-only: a tenant spanning two domains
-would couple their solves, which is exactly what the partition removes.
-Use the monolithic engine for SLA fleets, or cut so tenants nest inside
-domains (future work).
+**Tenant SLAs** (``tenants=`` at construction) work across the cut: the
+partition classifies tenants as domain-local (their contractual row is an
+ordinary SLA box inside one domain) or *cross-cut* (devices in several
+domains).  Every step the coordinator splits each cross-cut tenant's
+``[b_min, b_max]`` into per-domain slice sub-budgets
+(:meth:`BudgetCoordinator.plan_sla`), raises the domain grant floors so
+every feed funds its share of the tenant minimums, and the orchestrator
+threads the sub-budgets into the per-domain solves as traced SLA rows —
+stacked and loop dispatch alike, so grant changes and churn re-pins still
+recompile nothing (asserted via :func:`trace_count` in
+``tests/test_fleet_sla.py``).
 """
 
 from __future__ import annotations
@@ -58,8 +65,17 @@ from repro.core.engine import AllocEngine, _shape_requests
 from repro.core.nvpax import NvpaxOptions
 from repro.core.problem import AllocProblem
 from repro.core.treeops import SlaTopo, TreeTopo
-from repro.fleet.coordinator import BudgetCoordinator
-from repro.fleet.partition import FleetPartition, split_pdn
+from repro.fleet.coordinator import (
+    BudgetCoordinator,
+    check_tenants_deliverable,
+    split_entitlements,
+)
+from repro.fleet.partition import (
+    FleetPartition,
+    FleetSla,
+    build_fleet_sla,
+    split_pdn,
+)
 from repro.pdn.tree import FlatPDN, check_caps_fund_minimums
 
 __all__ = ["FleetOrchestrator", "FleetStepResult", "trace_count"]
@@ -75,8 +91,9 @@ def trace_count() -> int:
 
 
 class _DomainBatch(NamedTuple):
-    """[K, ...] padded per-domain fleet arrays (all traced; caps travel
-    separately because they change every step with the grants)."""
+    """[K, ...] padded per-domain fleet arrays (all traced; caps and tenant
+    SLA bounds travel separately because they change every step with the
+    coordinator grants)."""
 
     l: jnp.ndarray  # [K, N]
     u: jnp.ndarray  # [K, N]
@@ -85,16 +102,21 @@ class _DomainBatch(NamedTuple):
     start: jnp.ndarray  # [K, M] int32
     end: jnp.ndarray  # [K, M] int32
     depth: jnp.ndarray  # [K, M] int32
+    sla_dev: jnp.ndarray  # [K, E] int32 (padded edges -> the inert pad row)
+    sla_ten: jnp.ndarray  # [K, E] int32
 
 
-def _fleet_solve(dom, cap, r, active, warm, *, meta, opts):
+def _fleet_solve(dom, cap, sla_lo, sla_hi, r, active, warm, *, meta, opts):
     """All K domain control steps as one traced program."""
     global _N_TRACES
     _N_TRACES += 1  # executes at trace time only
-    sla = SlaTopo.empty(dom.l.dtype)
 
-    def one(l, u, ws, pri, start, end, depth, cap_k, r_k, act_k, warm_k):
+    def one(
+        l, u, ws, pri, start, end, depth, sdev, sten,
+        cap_k, slo_k, shi_k, r_k, act_k, warm_k,
+    ):
         tree = TreeTopo(start=start, end=end, cap=cap_k, depth=depth)
+        sla = SlaTopo(dev=sdev, ten=sten, lo=slo_k, hi=shi_k)
         ap = AllocProblem(
             l=l,
             u=u,
@@ -108,9 +130,10 @@ def _fleet_solve(dom, cap, r, active, warm, *, meta, opts):
         return solve_three_phase(ap, meta, opts, warm_k, None)
 
     warm_axes = None if warm is None else 0
-    return jax.vmap(one, in_axes=(0,) * 10 + (warm_axes,))(
+    return jax.vmap(one, in_axes=(0,) * 14 + (warm_axes,))(
         dom.l, dom.u, dom.weight_scale, dom.priority,
-        dom.start, dom.end, dom.depth, cap, r, active, warm,
+        dom.start, dom.end, dom.depth, dom.sla_dev, dom.sla_ten,
+        cap, sla_lo, sla_hi, r, active, warm,
     )
 
 
@@ -138,6 +161,11 @@ class FleetOrchestrator:
     mode : ``"auto"`` | ``"stacked"`` | ``"loop"`` (see module docstring).
     coordinator_mode : budget policy, see
         :class:`repro.fleet.coordinator.BudgetCoordinator`.
+    tenants : optional tenant SLA layout (anything with
+        ``tenant_of``/``b_min``/``b_max``, e.g.
+        :class:`repro.pdn.tenants.TenantLayout`); tenants may span the
+        domain cut (see module docstring).  ``priority`` defaults to the
+        layout's priorities when it carries them.
     pad_factor : in ``auto`` mode, use the stacked dispatch when padding
         every domain to the largest one wastes at most this factor in both
         device and node counts.
@@ -150,19 +178,23 @@ class FleetOrchestrator:
         level: int = 1,
         options: NvpaxOptions | None = None,
         priority: np.ndarray | None = None,
+        tenants=None,
         idle_threshold: float = 150.0,
         coordinator_mode: str = "waterfill",
         mode: str = "auto",
         pad_factor: float = 2.0,
         dtype=jnp.float64,
     ):
-        self.partition: FleetPartition = split_pdn(pdn, level)
+        self.partition: FleetPartition = split_pdn(pdn, level, tenants=tenants)
+        self._sla: FleetSla | None = self.partition.sla
         self.coordinator = BudgetCoordinator(self.partition, mode=coordinator_mode)
         self.options = options or NvpaxOptions()
         self.idle_threshold = float(idle_threshold)
         self.dtype = dtype
         self._x64 = bool(self.options.x64) and dtype == jnp.float64
         K = self.partition.k
+        if priority is None and tenants is not None:
+            priority = getattr(tenants, "priority", None)
         if priority is None:
             priority = np.ones((pdn.n,), np.int32)
         priority = np.asarray(priority, np.int32)
@@ -197,11 +229,19 @@ class FleetOrchestrator:
         self._engines: list[AllocEngine] | None = None
         self._warm: phases.WarmCarry | None = None
         self.history: list[dict[str, Any]] = []
+        if self._sla is not None:
+            # fail fast: contracts must be deliverable and fundable under
+            # the nameplate feeds before the first step
+            self._check_effective_floors()
         if mode == "stacked":
             # pad to the largest domain; static metadata is the union over
             # domains so per-domain differences stay traced, never static
             self._N = int(max(p.n for p in self._local_pdn))
             self._M = int(max(p.m for p in self._local_pdn))
+            # SLA pads: one extra always-inert row receives the padded
+            # incidence edges, so every real row keeps exact semantics
+            self._E = self._sla.max_edges if self._sla is not None else 0
+            self._T = self._sla.max_rows + 1 if self._sla is not None else 0
             self.meta = BatchMeta(
                 levels=tuple(
                     sorted({int(p) for p in priority}, reverse=True)
@@ -209,7 +249,9 @@ class FleetOrchestrator:
                 n_depths=int(
                     max(p.node_depth.max() for p in self._local_pdn)
                 ) + 1,
-                pin_free=True,  # fleet mode is SLA-free (see module docstring)
+                # tenant minimums can force pinned-free devices upward, so
+                # the pin-free simplification (paper 4.3.1) is SLA-free only
+                pin_free=self._sla is None,
                 max_rounds=self.options.max_rounds,
                 use_waterfill=self.options.use_waterfill,
                 run_phase2=self.options.run_phase2,
@@ -218,13 +260,9 @@ class FleetOrchestrator:
             )
             self._upload()
         else:
+            rb = self._initial_row_bounds() if self._sla is not None else None
             self._engines = [
-                AllocEngine(
-                    p,
-                    priority=self._priority[k],
-                    options=self.options,
-                    idle_threshold=self.idle_threshold,
-                )
+                self._build_engine(k, p, rb)
                 for k, p in enumerate(self._local_pdn)
             ]
 
@@ -278,6 +316,17 @@ class FleetOrchestrator:
             depth[k, : p.m] = p.node_depth
             cap[k, : p.m] = self._node_cap[k]
         self._cap_np = cap  # host mirror; row 0 gets the per-step grants
+        # tenant SLA incidence, padded: extra edges point at the always-
+        # inert pad row T-1 (bounds [0, inf) every step), so they never
+        # constrain anything
+        E, T = self._E, self._T
+        sla_dev = np.zeros((K, E), np.int32)
+        sla_ten = np.full((K, E), max(T - 1, 0), np.int32)
+        if self._sla is not None:
+            for k in range(K):
+                dev, ten = self._sla.edges(k)
+                sla_dev[k, : dev.shape[0]] = dev
+                sla_ten[k, : ten.shape[0]] = ten
         with self._ctx():
             self._dom = _DomainBatch(
                 l=jnp.asarray(l, self.dtype),
@@ -287,7 +336,202 @@ class FleetOrchestrator:
                 start=jnp.asarray(start),
                 end=jnp.asarray(end),
                 depth=jnp.asarray(depth),
+                sla_dev=jnp.asarray(sla_dev),
+                sla_ten=jnp.asarray(sla_ten),
             )
+
+    # -- tenant SLA plumbing -----------------------------------------------
+
+    def _build_engine(
+        self, k: int, p: FlatPDN, row_bounds=None
+    ) -> AllocEngine:
+        """Loop-mode per-domain engine, with its local SLA structure.
+        ``row_bounds`` (all domains' initial SLA bounds) avoids recomputing
+        the entitlement split per engine when building K at once."""
+        sla_topo = None
+        if self._sla is not None and self._sla.n_rows(k):
+            from repro.core.treeops import SlaTopo as _SlaTopo
+
+            dev, ten = self._sla.edges(k)
+            if row_bounds is None:
+                row_bounds = self._initial_row_bounds()
+            lo, hi = row_bounds[k]
+            sla_topo = _SlaTopo(dev=dev, ten=ten, lo=lo, hi=hi)
+        return AllocEngine(
+            p,
+            sla=sla_topo,
+            priority=self._priority[k],
+            options=self.options,
+            idle_threshold=self.idle_threshold,
+            # SLA lower bounds are re-pinned per step (tenant sub-budgets,
+            # runtime grant changes) and may rise above zero later; the
+            # pin-free simplification must stay off for SLA domains
+            pin_free=False if sla_topo is not None else None,
+        )
+
+    def _slice_aggregates(
+        self,
+        dev_l: list[np.ndarray],
+        dev_u: list[np.ndarray],
+        shaped: np.ndarray | None = None,
+        sla: FleetSla | None = None,
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Per-slice (floor, umax, demand) sums over the given boxes."""
+        sla = sla or self._sla
+        S = sla.n_slices
+        sf = np.zeros(S)
+        su = np.zeros(S)
+        sd = np.zeros(S)
+        offs = np.concatenate([[0], np.cumsum([l.shape[0] for l in dev_l])])
+        for s in range(S):
+            k = int(sla.slice_domain[s])
+            idx = sla.row_dev[k][int(sla.slice_row[s])]
+            sf[s] = dev_l[k][idx].sum()
+            su[s] = dev_u[k][idx].sum()
+            if shaped is not None:
+                sd[s] = shaped[offs[k] : offs[k + 1]][idx].sum()
+        return sf, su, sd
+
+    def _local_lift(
+        self,
+        dev_l: list[np.ndarray],
+        dev_u: list[np.ndarray],
+        sla: FleetSla | None = None,
+    ) -> np.ndarray:
+        """[K] extra minimum draw from *domain-local* tenant minimums, with
+        per-tenant deliverability validation (umax funds b_min, floors stay
+        under b_max)."""
+        sla = sla or self._sla
+        lift = np.zeros(self.k)
+        for k in range(self.k):
+            for r, t in enumerate(sla.rows[k]):
+                if sla.row_slice[k][r] >= 0:
+                    continue
+                idx = sla.row_dev[k][r]
+                floor = float(dev_l[k][idx].sum())
+                umax = float(dev_u[k][idx].sum())
+                if umax < sla.b_min[t] - 1e-9:
+                    raise ValueError(
+                        f"tenant {int(t)} minimum {sla.b_min[t]:.1f} W exceeds "
+                        f"its deliverable maximum {umax:.1f} W in domain {k}; "
+                        "restore devices or relax the SLA"
+                    )
+                if floor > sla.b_max[t] + 1e-9:
+                    raise ValueError(
+                        f"tenant {int(t)} device floors {floor:.1f} W exceed "
+                        f"its contractual maximum {sla.b_max[t]:.1f} W"
+                    )
+                lift[k] += max(float(sla.b_min[t]) - floor, 0.0)
+        return lift
+
+    def _sla_lifts(
+        self,
+        dev_l: list[np.ndarray],
+        dev_u: list[np.ndarray],
+        sla: FleetSla | None = None,
+    ) -> np.ndarray:
+        """[K] total tenant minimum-draw lift (local + cross-cut) under the
+        given boxes.  The cross-cut part uses the demand-free entitlement
+        split, which is exactly what the next ``plan_sla`` will enforce, so
+        mutation-time validation and step-time behavior agree."""
+        sla = sla or self._sla
+        if sla is None:
+            return np.zeros(self.k)
+        # a tenant with a positive contractual minimum must own at least one
+        # device somewhere — otherwise (e.g. a rebuild_domain that dropped
+        # its last devices) the contract would go silently unenforced
+        present = np.zeros(sla.n_tenants, bool)
+        for rows in sla.rows:
+            present[rows] = True
+        orphan = np.nonzero(~present & (sla.b_min > 1e-12))[0]
+        if orphan.size:
+            t = int(orphan[0])
+            raise ValueError(
+                f"tenant {t} has a contractual minimum {sla.b_min[t]:.1f} W "
+                "but no devices; relax the contract "
+                "(set_tenant_bounds(b_min=0)) before removing its last "
+                "devices"
+            )
+        lift = self._local_lift(dev_l, dev_u, sla)
+        if sla.n_slices:
+            sf, su, _ = self._slice_aggregates(dev_l, dev_u, sla=sla)
+            check_tenants_deliverable(sla, sf, su)
+            slice_lo, _ = split_entitlements(sla, sf, su, sf)
+            np.add.at(lift, sla.slice_domain, slice_lo - sf)
+        return lift
+
+    def _sla_row_bounds(
+        self,
+        slice_lo: np.ndarray,
+        slice_hi: np.ndarray,
+        sla: FleetSla | None = None,
+    ) -> list[tuple[np.ndarray, np.ndarray]]:
+        """Per-domain SLA row bounds: contractual rows for domain-local
+        tenants, coordinator sub-budgets for cross-cut slices."""
+        sla = sla or self._sla
+        out = []
+        for k in range(self.k):
+            R = sla.n_rows(k)
+            lo = np.zeros(R)
+            hi = np.zeros(R)
+            for r, t in enumerate(sla.rows[k]):
+                s = int(sla.row_slice[k][r])
+                if s >= 0:
+                    lo[r], hi[r] = slice_lo[s], slice_hi[s]
+                else:
+                    lo[r], hi[r] = sla.b_min[t], sla.b_max[t]
+            out.append((lo, hi))
+        return out
+
+    def _initial_row_bounds(self) -> list[tuple[np.ndarray, np.ndarray]]:
+        """Demand-free row bounds from current mirrors (construction and
+        engine rebuilds; every step re-pins the real ones)."""
+        sf, su, _ = self._slice_aggregates(self._dev_l, self._dev_u)
+        slice_lo, slice_hi = split_entitlements(self._sla, sf, su, sf)
+        return self._sla_row_bounds(slice_lo, slice_hi)
+
+    def _tenant_of_list(self) -> list[np.ndarray]:
+        """Per-domain local tenant membership, reconstructed from the
+        layout (the inverse of ``build_fleet_sla``'s input)."""
+        out = []
+        for k in range(self.k):
+            t_of = np.full(self._dev_l[k].shape[0], -1, np.int32)
+            for r, t in enumerate(self._sla.rows[k]):
+                t_of[self._sla.row_dev[k][r]] = t
+            out.append(t_of)
+        return out
+
+    def set_tenant_bounds(
+        self,
+        tenant: int,
+        *,
+        b_min: float | None = None,
+        b_max: float | None = None,
+    ) -> None:
+        """Change one tenant's contractual ``[b_min, b_max]`` at runtime.
+
+        Pure coordinator-level state: the new bounds flow into the next
+        step's entitlement split and per-domain SLA rows as traced values —
+        nothing recompiles (asserted in ``tests/test_fleet_sla.py``).  The
+        whole change is validated (deliverability, derated feeds still fund
+        the shifted minimums) before any state is committed.
+        """
+        sla = self._sla
+        if sla is None:
+            raise ValueError("orchestrator was built without tenants")
+        if not 0 <= int(tenant) < sla.n_tenants:
+            raise ValueError(f"tenant {tenant} out of range [0, {sla.n_tenants})")
+        new_min = sla.b_min.copy()
+        new_max = sla.b_max.copy()
+        if b_min is not None:
+            new_min[tenant] = float(b_min)
+        if b_max is not None:
+            new_max[tenant] = float(b_max)
+        if new_min[tenant] < 0 or new_min[tenant] > new_max[tenant] + 1e-9:
+            raise ValueError("tenant bounds must satisfy 0 <= b_min <= b_max")
+        candidate = dataclasses.replace(sla, b_min=new_min, b_max=new_max)
+        self._check_effective_floors(sla=candidate)
+        self._sla = candidate
 
     def _reset_domain_warm(self, k: int) -> None:
         if self.mode == "loop":
@@ -316,14 +560,9 @@ class FleetOrchestrator:
         """
         if not 0.0 <= scale <= 1.0:
             raise ValueError(f"scale must be in [0, 1], got {scale}")
-        dmin = float(self._dev_l[k].sum())
-        cap = float(self._node_cap[k][0]) * float(scale)
-        if cap < dmin - 1e-9:
-            raise ValueError(
-                f"domain {k} derated feed {cap:.1f} W cannot fund its "
-                f"minimum draw {dmin:.1f} W; mask devices out first "
-                "(FleetLifecycle.device_leave)"
-            )
+        dcap_eff = np.array([c[0] for c in self._node_cap]) * self._domain_supply
+        dcap_eff[k] = float(self._node_cap[k][0]) * float(scale)
+        self._check_effective_floors(dcap_eff=dcap_eff)
         self._domain_supply[k] = float(scale)
 
     def set_feed_scale(self, scale: float) -> None:
@@ -332,34 +571,44 @@ class FleetOrchestrator:
         fleet's current minimum draw and ``scale`` cannot exceed 1.0."""
         if not 0.0 <= scale <= 1.0:
             raise ValueError(f"scale must be in [0, 1], got {scale}")
-        dmin = np.array([l.sum() for l in self._dev_l])
-        check_caps_fund_minimums(
-            self.coordinator.start, self.coordinator.end,
-            self.coordinator.cap * float(scale), dmin,
-            what=f"feed scale {scale}: coordinator row",
-        )
+        self._check_effective_floors(feed_scale=float(scale))
         self._feed_scale = float(scale)
 
     def _check_effective_floors(
-        self, dmin: np.ndarray, dcap: np.ndarray | None = None
+        self,
+        dev_l: list[np.ndarray] | None = None,
+        dev_u: list[np.ndarray] | None = None,
+        dcap_eff: np.ndarray | None = None,
+        feed_scale: float | None = None,
+        sla: FleetSla | None = None,
     ) -> None:
         """The *derated* feeds (domain supplies + feed scale) must fund the
-        given per-domain minimum draws — the same invariant
-        ``set_domain_supply``/``set_feed_scale`` enforce, checked from the
-        other direction when floors rise (device rejoin, box re-pins)."""
-        if dcap is None:
-            dcap = np.array([c[0] for c in self._node_cap]) * self._domain_supply
-        bad = np.nonzero(dmin > dcap + 1e-9)[0]
+        per-domain minimum draws — device floors plus tenant minimum lifts —
+        under the given (possibly prospective) boxes, derates and SLA
+        bounds.  Shared by every mutation path (supply derates, box
+        re-pins, rejoins, tenant grant changes) so a rejected change leaves
+        all state untouched."""
+        dev_l = self._dev_l if dev_l is None else dev_l
+        dev_u = self._dev_u if dev_u is None else dev_u
+        dmin = np.array([l.sum() for l in dev_l])
+        dmin = dmin + self._sla_lifts(dev_l, dev_u, sla or self._sla)
+        if dcap_eff is None:
+            dcap_eff = (
+                np.array([c[0] for c in self._node_cap]) * self._domain_supply
+            )
+        bad = np.nonzero(dmin > dcap_eff + 1e-9)[0]
         if bad.size:
             k = int(bad[0])
             raise ValueError(
                 f"domain {k} minimum draw {dmin[k]:.1f} W exceeds its "
-                f"derated feed {dcap[k]:.1f} W; restore the supply first "
-                "(set_domain_supply)"
+                f"derated feed {dcap_eff[k]:.1f} W; restore the supply "
+                "(set_domain_supply) or mask devices out first "
+                "(FleetLifecycle.device_leave)"
             )
+        scale = self._feed_scale if feed_scale is None else feed_scale
         check_caps_fund_minimums(
             self.coordinator.start, self.coordinator.end,
-            self.coordinator.cap * self._feed_scale, dmin,
+            self.coordinator.cap * scale, dmin,
             what="derated coordinator row",
         )
 
@@ -401,12 +650,17 @@ class FleetOrchestrator:
             what=f"domain {k} node",
         )
         # an active derate must also still fund the (possibly raised) floor
-        # — otherwise the failure would surface one step later in plan()
-        dmin_all = np.array([l.sum() for l in self._dev_l])
-        dmin_all[k] = new_l.sum()
+        # — including tenant minimum lifts — otherwise the failure would
+        # surface one step later in plan()
+        dev_l_new = list(self._dev_l)
+        dev_u_new = list(self._dev_u)
+        dev_l_new[k] = new_l
+        dev_u_new[k] = new_u
         dcap_eff = np.array([c[0] for c in self._node_cap]) * self._domain_supply
         dcap_eff[k] = new_cap[0] * self._domain_supply[k]
-        self._check_effective_floors(dmin_all, dcap_eff)
+        self._check_effective_floors(
+            dev_l=dev_l_new, dev_u=dev_u_new, dcap_eff=dcap_eff
+        )
         self._dev_l[k] = new_l.copy()
         self._dev_u[k] = new_u.copy()
         self._node_cap[k] = new_cap.copy()
@@ -444,13 +698,23 @@ class FleetOrchestrator:
         new_pdn: FlatPDN,
         *,
         priority: np.ndarray | None = None,
+        tenant_of: np.ndarray | None = None,
     ) -> None:
         """Replace one domain's topology (structural churn: servers added or
         decommissioned).  Only this domain's engine is rebuilt; the other
         K-1 domains keep their compiled programs and warm state.  In stacked
         mode the new topology must fit the padded shape and static metadata
-        (device/node counts, tree depth, priority levels); it then re-pins
-        as traced arrays with zero recompilation.
+        (device/node counts, tree depth, priority levels, SLA row/edge
+        counts); it then re-pins as traced arrays with zero recompilation.
+
+        ``tenant_of`` maps the new domain's local devices to global tenant
+        ids (-1 unassigned; default: the rebuilt domain carries no tenant
+        devices).  Cross-cut tenant membership is updated atomically with
+        the topology: the whole change — shapes, tenant deliverability
+        under the new boxes, derated feeds funding the shifted minimum
+        lifts — is validated before any state is committed, and a tenant
+        whose devices now all live in one domain reverts to an ordinary
+        domain-local SLA row.
         """
         new_pdn.validate()
         if priority is None:
@@ -458,6 +722,22 @@ class FleetOrchestrator:
         priority = np.asarray(priority, np.int32)
         if priority.shape != (new_pdn.n,):
             raise ValueError(f"priority shape {priority.shape} != ({new_pdn.n},)")
+        candidate_sla = self._sla
+        if self._sla is not None:
+            if tenant_of is None:
+                tenant_of = np.full(new_pdn.n, -1, np.int32)
+            tenant_of = np.asarray(tenant_of, np.int32)
+            if tenant_of.shape != (new_pdn.n,):
+                raise ValueError(
+                    f"tenant_of shape {tenant_of.shape} != ({new_pdn.n},)"
+                )
+            lists = self._tenant_of_list()
+            lists[k] = tenant_of
+            candidate_sla = build_fleet_sla(
+                lists, self._sla.b_min, self._sla.b_max
+            )
+        elif tenant_of is not None:
+            raise ValueError("orchestrator was built without tenants")
         if self.mode == "stacked":
             if new_pdn.n > self._N or new_pdn.m > self._M:
                 raise ValueError(
@@ -471,19 +751,36 @@ class FleetOrchestrator:
                 raise ValueError(
                     "rebuild introduces new priority levels; rebuild the orchestrator"
                 )
+            if candidate_sla is not None and (
+                candidate_sla.max_rows > self._T - 1
+                or candidate_sla.max_edges > self._E
+            ):
+                raise ValueError(
+                    "rebuild exceeds the padded SLA row/edge shape; rebuild "
+                    "the orchestrator"
+                )
+        if candidate_sla is not None:
+            dev_l_new = list(self._dev_l)
+            dev_u_new = list(self._dev_u)
+            dev_l_new[k] = new_pdn.dev_l
+            dev_u_new[k] = new_pdn.dev_u
+            dcap_eff = (
+                np.array([c[0] for c in self._node_cap]) * self._domain_supply
+            )
+            dcap_eff[k] = new_pdn.node_cap[0] * self._domain_supply[k]
+            self._check_effective_floors(
+                dev_l=dev_l_new, dev_u=dev_u_new, dcap_eff=dcap_eff,
+                sla=candidate_sla,
+            )
         self._local_pdn[k] = new_pdn
         self._priority[k] = priority.copy()
         self._dev_l[k] = new_pdn.dev_l.copy()
         self._dev_u[k] = new_pdn.dev_u.copy()
         self._node_cap[k] = new_pdn.node_cap.copy()
+        self._sla = candidate_sla
         if self.mode == "loop":
             assert self._engines is not None
-            self._engines[k] = AllocEngine(
-                new_pdn,
-                priority=priority,
-                options=self.options,
-                idle_threshold=self.idle_threshold,
-            )
+            self._engines[k] = self._build_engine(k, new_pdn)
         else:
             self._upload()
             self._reset_domain_warm(k)
@@ -503,13 +800,34 @@ class FleetOrchestrator:
         dmin = np.array([l.sum() for l in self._dev_l])
         return dcap, ccap, dmin
 
-    def plan(self, demand: np.ndarray) -> np.ndarray:
-        """Coordinator grants for a demand vector under current supply."""
+    def _plan(self, demand: np.ndarray, shaped: np.ndarray | None = None):
+        """(grants, per-domain SLA row bounds | None, slice_lo, slice_hi)."""
         dcap, ccap, dmin = self._effective_domain_caps()
-        return self.coordinator.plan(
-            demand, domain_cap=dcap, coord_cap=ccap, domain_min=dmin,
+        if self._sla is None:
+            grants = self.coordinator.plan(
+                demand, domain_cap=dcap, coord_cap=ccap, domain_min=dmin,
+                domain_n=self.domain_sizes,
+            )
+            return grants, None, None, None
+        sf, su, sd = self._slice_aggregates(self._dev_l, self._dev_u, shaped)
+        grants, slo, shi = self.coordinator.plan_sla(
+            demand,
+            sla=self._sla,
+            slice_floor=sf,
+            slice_umax=su,
+            slice_demand=sd if shaped is not None else sf,
+            local_lift=self._local_lift(self._dev_l, self._dev_u),
+            domain_cap=dcap,
+            coord_cap=ccap,
+            domain_min=dmin,
             domain_n=self.domain_sizes,
         )
+        return grants, self._sla_row_bounds(slo, shi), slo, shi
+
+    def plan(self, demand: np.ndarray) -> np.ndarray:
+        """Coordinator grants for a demand vector under current supply
+        (with tenants: entitlement rows enforced, demand-free slice split)."""
+        return self._plan(demand)[0]
 
     def step(
         self,
@@ -540,13 +858,16 @@ class FleetOrchestrator:
         demand = np.array(
             [shaped[offs[k] : offs[k + 1]].sum() for k in range(self.k)]
         )
-        grants = self.plan(demand)
+        grants, row_bounds, slice_lo, slice_hi = self._plan(demand, shaped)
         t0 = time.perf_counter()
         if self.mode == "stacked":
-            res = self._step_stacked(req, active, grants, offs)
+            res = self._step_stacked(req, active, grants, offs, row_bounds)
         else:
-            res = self._step_loop(req, active, grants, offs)
+            res = self._step_loop(req, active, grants, offs, row_bounds)
         wall = time.perf_counter() - t0
+        if slice_lo is not None:
+            res[1]["slice_lo"] = slice_lo
+            res[1]["slice_hi"] = slice_hi
         out = FleetStepResult(
             allocation=res[0],
             grants=grants,
@@ -566,7 +887,7 @@ class FleetOrchestrator:
         )
         return out
 
-    def _step_stacked(self, req, active, grants, offs):
+    def _step_stacked(self, req, active, grants, offs, row_bounds=None):
         K, N = self.k, self._N
         r = np.zeros((K, N))
         act = np.zeros((K, N), bool)
@@ -576,10 +897,20 @@ class FleetOrchestrator:
             act[k, :nk] = active[offs[k] : offs[k + 1]]
         cap = self._cap_np.copy()
         cap[:, 0] = grants
+        # per-step SLA rows: real rows get contract/sub-budget bounds, pad
+        # rows stay [0, inf) (inert)
+        sla_lo = np.zeros((K, self._T))
+        sla_hi = np.full((K, self._T), np.inf)
+        if row_bounds is not None:
+            for k, (lo_k, hi_k) in enumerate(row_bounds):
+                sla_lo[k, : lo_k.shape[0]] = lo_k
+                sla_hi[k, : hi_k.shape[0]] = hi_k
         with self._ctx():
             x1, x2, x3, carry, stats = _fleet_step_jit(
                 self._dom,
                 jnp.asarray(cap, self.dtype),
+                jnp.asarray(sla_lo, self.dtype),
+                jnp.asarray(sla_hi, self.dtype),
                 jnp.asarray(r, self.dtype),
                 jnp.asarray(act),
                 self._warm,
@@ -602,11 +933,14 @@ class FleetOrchestrator:
             "mode": "stacked",
         }
 
-    def _step_loop(self, req, active, grants, offs):
+    def _step_loop(self, req, active, grants, offs, row_bounds=None):
         assert self._engines is not None
         allocs, solves, iters, phase_iters, conv = [], [], [], [], []
         for k, eng in enumerate(self._engines):
             eng.set_root_cap(grants[k])  # traced cap swap: no recompile
+            if row_bounds is not None and row_bounds[k][0].shape[0]:
+                # traced SLA-bound swap: tenant sub-budgets, no recompile
+                eng.set_sla_bounds(row_bounds[k][0], row_bounds[k][1])
             res = eng.step(
                 req[offs[k] : offs[k + 1]],
                 active=active[offs[k] : offs[k + 1]],

@@ -20,7 +20,6 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_arch
 from repro.data.pipeline import SyntheticLMData

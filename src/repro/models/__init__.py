@@ -6,11 +6,22 @@ LM vs encoder-decoder)."""
 
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple
+from typing import Callable, NamedTuple
 
 from repro.models import attention, blocks, common, encdec, lm, mlp, moe, ssm
 
-__all__ = ["ModelApi", "build"]
+__all__ = [
+    "ModelApi",
+    "attention",
+    "blocks",
+    "build",
+    "common",
+    "encdec",
+    "lm",
+    "mlp",
+    "moe",
+    "ssm",
+]
 
 
 class ModelApi(NamedTuple):

@@ -10,7 +10,6 @@ whisper's LayerNorm recorded in DESIGN.md).
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -101,9 +100,11 @@ def _decode_stack(params, cfg, x, positions, memory, want_cache=False):
         return x, cache
 
     if cfg.remat and not want_cache:
-        inner = lambda p, x: blocks.block_train(
-            p, cfg, 0, x, positions, causal=True, rope=False, memory=memory
-        )[0]
+        def inner(p, x):
+            return blocks.block_train(
+                p, cfg, 0, x, positions, causal=True, rope=False, memory=memory
+            )[0]
+
         ck = jax.checkpoint(inner)
         x, caches = jax.lax.scan(lambda x, p: (ck(p, x), None), x, params["dec"])
     else:

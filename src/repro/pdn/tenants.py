@@ -15,7 +15,12 @@ import numpy as np
 from repro.core.treeops import SlaTopo
 from repro.pdn.tree import FlatPDN
 
-__all__ = ["TenantLayout", "assign_tenants", "appendix_b_layout"]
+__all__ = [
+    "TenantLayout",
+    "assign_tenants",
+    "assign_cross_domain_tenants",
+    "appendix_b_layout",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +90,65 @@ def assign_tenants(
         b_max[k] = hi_frac * umax
 
     priority = np.ones(n, dtype=np.int32)
+    owned = tenant_of >= 0
+    priority[owned] = rng.choice(np.asarray(priorities, np.int32), owned.sum())
+    return TenantLayout(tenant_of, n_tenants, b_min, b_max, priority)
+
+
+def assign_cross_domain_tenants(
+    pdn: FlatPDN,
+    level: int = 1,
+    *,
+    n_cross: int = 2,
+    per_domain: int = 2,
+    n_local_per_domain: int = 1,
+    local_size: int = 3,
+    lo_frac: float = 0.4,
+    hi_frac: float = 0.8,
+    priorities: tuple[int, ...] = (1, 2, 3),
+    seed: int = 0,
+) -> TenantLayout:
+    """Tenant layout that deliberately spans a fleet partition cut.
+
+    Every *cross* tenant takes ``per_domain`` devices from EACH subtree
+    rooted at depth ``level`` (the power domains of
+    ``repro.fleet.split_pdn(pdn, level)``), so its SLA row couples all
+    domains — the case the fleet coordinator's entitlement split exists
+    for.  Each domain additionally hosts ``n_local_per_domain`` contiguous
+    *domain-local* tenants of ``local_size`` devices (the easy case that
+    nests inside one engine).  Bounds are ``[lo_frac, hi_frac]`` of each
+    tenant's aggregate maximum power, as in :func:`assign_tenants`.
+    """
+    cut = np.nonzero(pdn.node_depth == level)[0]
+    if cut.size < 2:
+        raise ValueError(f"need >= 2 domains at depth {level}, got {cut.size}")
+    ranges = [(int(pdn.node_start[j]), int(pdn.node_end[j])) for j in cut]
+    need = n_cross * per_domain + n_local_per_domain * local_size
+    small = min(hi - lo for lo, hi in ranges)
+    if need > small:
+        raise ValueError(
+            f"{need} tenant devices per domain > smallest domain ({small})"
+        )
+    rng = np.random.default_rng(seed)
+    tenant_of = np.full(pdn.n, -1, np.int32)
+    n_tenants = n_cross + n_local_per_domain * len(ranges)
+    for k, (lo, hi) in enumerate(ranges):
+        pick = rng.permutation(np.arange(lo, hi))[:need]
+        pos = 0
+        for t in range(n_cross):
+            tenant_of[pick[pos : pos + per_domain]] = t
+            pos += per_domain
+        for j in range(n_local_per_domain):
+            t = n_cross + k * n_local_per_domain + j
+            tenant_of[pick[pos : pos + local_size]] = t
+            pos += local_size
+    b_min = np.zeros(n_tenants)
+    b_max = np.zeros(n_tenants)
+    for t in range(n_tenants):
+        umax = pdn.dev_u[tenant_of == t].sum()
+        b_min[t] = lo_frac * umax
+        b_max[t] = hi_frac * umax
+    priority = np.ones(pdn.n, np.int32)
     owned = tenant_of >= 0
     priority[owned] = rng.choice(np.asarray(priorities, np.int32), owned.sum())
     return TenantLayout(tenant_of, n_tenants, b_min, b_max, priority)

@@ -28,12 +28,13 @@ from repro.core.greedy import greedy_allocate, static_allocate
 from repro.core.metrics import satisfaction_ratio
 from repro.pdn.telemetry import TelemetrySim, TraceConfig
 from repro.pdn.tree import FlatPDN
-from repro.power.controller import ControllerConfig, PowerController
+from repro.power.controller import PowerController
 from repro.power.power_model import DvfsModel
 from repro.power.straggler import straggler_report
 
 if TYPE_CHECKING:  # pragma: no cover - typing only (avoid import cycle cost)
     from repro.fleet import FleetOrchestrator
+    from repro.pdn.tenants import TenantLayout
 
 __all__ = ["DatacenterSim"]
 
@@ -44,6 +45,7 @@ class DatacenterSim:
     trace: TelemetrySim
     controller: PowerController | None = None
     orchestrator: "FleetOrchestrator | None" = None
+    tenants: "TenantLayout | None" = None
     dvfs: DvfsModel = dataclasses.field(default_factory=DvfsModel)
 
     @classmethod
@@ -51,11 +53,15 @@ class DatacenterSim:
               controller: PowerController | None = None,
               orchestrator: "FleetOrchestrator | None" = None,
               fleet_level: int | None = None,
+              tenants: "TenantLayout | None" = None,
               trace_cfg: TraceConfig | None = None) -> "DatacenterSim":
         """``fleet_level`` switches to fleet mode: the PDN is cut at that
         depth into power domains served by a :class:`FleetOrchestrator`
         (waterfill budget coordination).  Pass ``orchestrator`` instead for
-        a custom-configured one."""
+        a custom-configured one.  ``tenants`` attaches a tenant SLA layout
+        to whichever control plane is built — tenants may span the fleet
+        cut (the coordinator splits their entitlements per step) — and
+        enables the per-step SLA margin metrics in :meth:`run`."""
         trace = TelemetrySim(
             trace_cfg or TraceConfig(n_devices=pdn.n, seed=seed)
         )
@@ -69,12 +75,35 @@ class DatacenterSim:
         if orchestrator is None and fleet_level is not None:
             from repro.fleet import FleetOrchestrator
 
-            orchestrator = FleetOrchestrator(pdn, level=fleet_level)
+            orchestrator = FleetOrchestrator(
+                pdn, level=fleet_level, tenants=tenants
+            )
         ctrl = None
         if orchestrator is None:
+            if controller is None and tenants is not None:
+                controller = PowerController(
+                    pdn, sla=tenants.sla_topo(), priority=tenants.priority
+                )
             ctrl = controller or PowerController(pdn)
         return cls(pdn=pdn, trace=trace, controller=ctrl,
-                   orchestrator=orchestrator)
+                   orchestrator=orchestrator, tenants=tenants)
+
+    @classmethod
+    def cross_tenant(cls, *, n_domains: int = 4, seed: int = 0,
+                     lo_frac: float = 0.5, hi_frac: float = 0.8,
+                     **tenant_kw) -> "DatacenterSim":
+        """Cross-tenant scenario generator: a homogeneous K-domain fleet
+        whose tenants deliberately span the domain cut, served by a
+        :class:`FleetOrchestrator` with coordinator-level SLA enforcement
+        (the multi-tenant half of the paper's title at fleet scale)."""
+        from repro.pdn.hierarchy_gen import homogeneous_fleet
+        from repro.pdn.tenants import assign_cross_domain_tenants
+
+        pdn = homogeneous_fleet(n_domains)
+        tenants = assign_cross_domain_tenants(
+            pdn, 1, lo_frac=lo_frac, hi_frac=hi_frac, seed=seed, **tenant_kw
+        )
+        return cls.build(pdn, seed=seed, fleet_level=1, tenants=tenants)
 
     @property
     def _idle_threshold(self) -> float:
@@ -105,7 +134,18 @@ class DatacenterSim:
         out: dict[str, list] = {
             "S_nvpax": [], "S_static": [], "S_greedy": [],
             "wall_ms": [], "straggler_tax": [], "truncated": [],
+            "sla_min_margin": [], "sla_min_margin_static": [],
         }
+
+        def _min_margin(alloc: np.ndarray) -> float:
+            """Worst tenant lower-SLA margin (watts); >= 0 = all honored."""
+            lay = self.tenants
+            sums = np.bincount(
+                lay.tenant_of[lay.tenant_of >= 0],
+                weights=alloc[lay.tenant_of >= 0],
+                minlength=lay.n_tenants,
+            )
+            return float((sums - lay.b_min).min())
         # the static baseline is request-independent: one allocation serves
         # every step (hoisted out of the loop — it used to dominate per-step
         # host time at large n)
@@ -136,6 +176,12 @@ class DatacenterSim:
                 out["truncated"].append(truncated)
                 rep = straggler_report(alloc, self.trace.job_of, self.dvfs)
                 out["straggler_tax"].append(rep["mean_tax"])
+                if self.tenants is not None:
+                    out["sla_min_margin"].append(_min_margin(alloc))
+                    if baselines:
+                        out["sla_min_margin_static"].append(
+                            _min_margin(static_alloc)
+                        )
                 if baselines:
                     out["S_static"].append(
                         satisfaction_ratio(r, static_alloc)

@@ -18,7 +18,9 @@ class AdamWState(NamedTuple):
 
 
 def adamw_init(params, dtype=jnp.float32) -> AdamWState:
-    z = lambda p: jnp.zeros(p.shape, dtype)
+    def z(p):
+        return jnp.zeros(p.shape, dtype)
+
     return AdamWState(
         m=jax.tree.map(z, params),
         v=jax.tree.map(z, params),

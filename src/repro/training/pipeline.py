@@ -20,8 +20,6 @@ primitives and is left as future work (DESIGN.md).
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map

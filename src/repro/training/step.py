@@ -12,7 +12,6 @@ via the "batch" logical axis.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax

@@ -30,7 +30,10 @@ from repro.pdn.tree import build_from_level_sizes
 def test_primal_update_sweep(n, dtype):
     with enable_x64(dtype == jnp.float64):
         rng = np.random.default_rng(n)
-        mk = lambda: jnp.asarray(rng.normal(size=n), dtype)
+
+        def mk():
+            return jnp.asarray(rng.normal(size=n), dtype)
+
         x, gx, c, w = mk(), mk(), mk(), jnp.abs(mk())
         target = mk()
         lo = mk() - 2.0
@@ -47,7 +50,10 @@ def test_primal_update_sweep(n, dtype):
 def test_dual_prox_sweep(n, dtype):
     with enable_x64(dtype == jnp.float64):
         rng = np.random.default_rng(n + 1)
-        mk = lambda: jnp.asarray(rng.normal(size=n), dtype)
+
+        def mk():
+            return jnp.asarray(rng.normal(size=n), dtype)
+
         y, a = mk(), mk()
         lo = jnp.where(mk() > 0, -jnp.inf, mk())
         hi = jnp.where(mk() > 0, jnp.inf, lo + 1.0)

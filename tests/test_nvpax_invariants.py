@@ -18,12 +18,11 @@ import jax.numpy as jnp
 
 from repro.compat import enable_x64
 
-from repro.core.metrics import satisfaction_ratio, useful_utilization
-from repro.core.nvpax import NvpaxOptions, optimize
+from repro.core.metrics import satisfaction_ratio
+from repro.core.nvpax import optimize
 from repro.core.greedy import static_allocate
 from repro.core.problem import AllocProblem
 from repro.core.treeops import sla_matvec
-from repro.pdn.hierarchy_gen import random_hierarchy
 from repro.pdn.tenants import assign_tenants
 from repro.pdn.tree import build_from_level_sizes
 

@@ -12,13 +12,11 @@ from __future__ import annotations
 import numpy as np
 import pytest
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import pdhg, phases
 from repro.core.problem import AllocProblem
 from repro.core.refsolve import ref_solve
-from repro.core.treeops import SlaTopo
 from repro.pdn.hierarchy_gen import random_hierarchy
 from repro.pdn.tenants import assign_tenants
 

@@ -6,7 +6,7 @@ from __future__ import annotations
 import numpy as np
 import pytest
 
-from repro.power.controller import ControllerConfig, PowerController
+from repro.power.controller import PowerController
 from repro.power.power_model import DvfsModel, arch_power_profile
 from repro.power.simulator import DatacenterSim
 from repro.power.straggler import job_slowdowns, straggler_report

@@ -7,7 +7,6 @@ import os
 import subprocess
 import sys
 
-import numpy as np
 import pytest
 
 import jax
@@ -16,7 +15,7 @@ from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro.analysis.flops import analyze_hlo
 from repro.analysis.hlo import collective_stats, shape_bytes
-from repro.sharding.logical import AxisRules, default_rules, resolve_spec
+from repro.sharding.logical import default_rules, resolve_spec
 
 MESH = AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
 POD = AbstractMesh((("data", 16), ("model", 16)))

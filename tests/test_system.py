@@ -5,7 +5,6 @@ Static, and the warm-started loop stays within a control-loop budget."""
 from __future__ import annotations
 
 import numpy as np
-import pytest
 
 from repro.core.greedy import greedy_allocate, static_allocate
 from repro.core.metrics import satisfaction_ratio

@@ -15,9 +15,8 @@ from repro.data.pipeline import SyntheticLMData
 from repro.models import build
 from repro.training import checkpoint as ckpt
 from repro.training.compression import make_compressor, quantize_dequantize
-from repro.training.optimizer import adamw_init, adamw_update, clip_by_global_norm
+from repro.training.optimizer import clip_by_global_norm
 from repro.training.schedule import cosine_schedule
-from repro.training.state import TrainState
 from repro.training.step import init_train_state, make_train_step
 
 
