@@ -28,7 +28,7 @@ import json
 import os
 import sys
 
-REQUIRED = ("BENCH_engine.json", "BENCH_fleet.json")
+REQUIRED = ("BENCH_engine.json", "BENCH_fleet.json", "BENCH_solver.json")
 OPTIONAL = ("BENCH_sla_priorities.json",)
 
 ENGINE_ROW_KEYS = (
@@ -98,6 +98,28 @@ def check_fleet(d: dict, errors: list[str], gated: dict[str, float]) -> None:
     )
 
 
+SOLVER_CASE_KEYS = ("iterations", "converged", "kkt_certified", "restarts")
+
+
+def check_solver(d: dict, errors: list[str], gated: dict[str, float]) -> None:
+    """Degenerate-geometry certification artifact (ISSUE 5): every case must
+    exit with a certificate within the recorded budget, and the margin below
+    the budget is gated against regression."""
+    if not d.get("cases"):
+        _fail(errors, "BENCH_solver.json: no degenerate cases")
+        return
+    for case in d["cases"]:
+        for key in SOLVER_CASE_KEYS:
+            if key not in case:
+                _fail(errors, f"BENCH_solver.json: case missing {key!r}")
+                return
+    for flag in sorted(k for k in d if k.startswith("meets_")):
+        if not d[flag]:
+            _fail(errors, f"BENCH_solver.json: acceptance flag {flag} is false")
+    budget = float(d["cert_budget"])
+    gated["solver.cert_margin"] = (budget - float(d["max_iterations"])) / budget
+
+
 def check_sla_priorities(d: dict, errors: list[str], gated: dict[str, float]) -> None:
     for key in ("S_global_mean", "sla_margin_mean", "violations"):
         if key not in d:
@@ -119,6 +141,9 @@ MARGINS = {
     "fleet.S_brownout": 0.95,
     "fleet.sla_min_margin_nvpax_W": 0.0,  # >= 0 is the contract, not perf
     "sla_priorities.S_global_mean": 0.98,
+    # fraction of the certification budget left unused on the degenerate
+    # suite; 0.5 margin tolerates run-to-run restart-path variance
+    "solver.cert_margin": 0.5,
 }
 
 
@@ -147,6 +172,7 @@ def main() -> int:
     checkers = {
         "BENCH_engine.json": check_engine,
         "BENCH_fleet.json": check_fleet,
+        "BENCH_solver.json": check_solver,
         "BENCH_sla_priorities.json": check_sla_priorities,
     }
     for name in REQUIRED + OPTIONAL:

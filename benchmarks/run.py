@@ -75,6 +75,13 @@ def main() -> None:
             "BENCH_sla_priorities",
             lambda: sla_priorities.run(steps=8 if args.full else 3),
         ),
+        # degenerate-geometry certification suite (ISSUE 5): certified
+        # iteration counts on the fixtures that stalled the pre-overhaul
+        # solver, gated by check_bench alongside BENCH_engine/BENCH_fleet
+        (
+            "BENCH_solver",
+            lambda: solver_bench.run_degenerate(n_seeds=3 if args.full else 2),
+        ),
         ("solver_bench", lambda: solver_bench.run(steps=5 if args.full else 3)),
         ("kernel_bench", lambda: kernel_bench.run()),
         ("roofline_summary", lambda: roofline.run()),
@@ -134,6 +141,11 @@ def main() -> None:
                 f"S={r['S_global_mean']:.2f}% margins "
                 f"{r['sla_margin_mean']:.1f}%/{r['sla_margin_worst_tenant_mean']:.1f}% "
                 f"violations={r['violations']} (paper 98.93/54.4/33.8/0)"
+            ),
+            "BENCH_solver": lambda r: (
+                f"{len(r['cases'])} degenerate cases, max {r['max_iterations']} "
+                f"iters (budget {r['cert_budget']}), certified="
+                f"{r['meets_cert_budget']}"
             ),
             "solver_bench": lambda r: (
                 f"warm {r['warm_ms_mean']:.0f}ms vs cold {r['cold_ms_mean']:.0f}ms; "

@@ -1,6 +1,12 @@
 """Solver-internals microbench (§Perf evidence): per-phase iterations and
-wall time, warm vs cold starts, waterfill fast-path vs iterated LP, and
-batched (vmap-over-scenarios) vs sequential throughput."""
+wall time, warm vs cold starts, waterfill fast-path vs iterated LP, batched
+(vmap-over-scenarios) vs sequential throughput, and the degenerate-geometry
+certification suite (``run_degenerate`` -> ``BENCH_solver.json``, gated by
+``benchmarks/check_bench.py``).
+
+    PYTHONPATH=src python benchmarks/solver_bench.py --degenerate \
+        [--out artifacts/bench]
+"""
 
 from __future__ import annotations
 
@@ -13,6 +19,10 @@ from repro.core.nvpax import NvpaxOptions, optimize
 from repro.core.problem import AllocProblem
 from repro.pdn.telemetry import TelemetrySim, TraceConfig
 from repro.pdn.tree import build_datacenter
+
+# ISSUE 5 acceptance bound: every degenerate max-min round must exit with a
+# certificate (KKT or no-progress/vertex) within this many PDHG iterations
+CERT_BUDGET = 5_000
 
 
 def bench_batched(K: int = 16, level_sizes=(2, 4, 4), gpus: int = 8) -> dict:
@@ -106,7 +116,134 @@ def run(steps: int = 5) -> dict:
     }
 
 
-if __name__ == "__main__":
-    import json
+def run_degenerate(n_seeds: int = 2) -> dict:
+    """Degenerate-geometry certification suite -> ``BENCH_solver.json``.
 
-    print(json.dumps(run(), indent=1))
+    The geometries that stalled the pre-overhaul solver for 50k iterations:
+    node caps exactly equal to subtree maxima (oversubscription 1.0) with
+    tenant SLA rows, plus an exactly-tied-requests variant.  For each case
+    the Phase II max-min LP is solved directly (certified-iteration counts,
+    restart counts, optimum quality vs HiGHS when scipy is present) and the
+    full three-phase engine step is timed.
+    """
+    import jax.numpy as jnp
+
+    from repro.compat import enable_x64
+    from repro.core import phases, solver
+    from repro.core.engine import AllocEngine
+    from repro.core.refsolve import HAVE_SCIPY, ref_solve
+    from repro.pdn.tenants import assign_tenants
+    from repro.pdn.tree import build_from_level_sizes
+
+    cases = []
+    with enable_x64(True):
+        for seed in range(n_seeds):
+            for ties in (False, True):
+                pdn = build_from_level_sizes(
+                    [2, 2], gpus_per_server=4, oversubscription=1.0
+                )
+                lay = assign_tenants(
+                    pdn, n_tenants=2, devices_per_tenant=4,
+                    hi_frac=1.0 if ties else 0.8, seed=seed,
+                )
+                tele = (
+                    np.full(pdn.n, 660.0)
+                    if ties
+                    else np.random.default_rng(seed).uniform(600, 690, pdn.n)
+                )
+                ap = AllocProblem.build(
+                    pdn, tele, sla=lay.sla_topo(), priority=lay.priority
+                )
+                x1, state, _ = phases.phase1(ap, solver.SolverOptions())
+                mask_a = ap.active & ~phases.saturated_mask(x1, ap, ap.active)
+                prob = phases.lp_step(
+                    ap, x1, mask_a, ~(mask_a | ap.idle), ap.idle, 1e-5
+                )
+                warm = solver.SolverState(
+                    x1, jnp.zeros(()), state.y_tree, state.y_sla, state.y_imp
+                )
+                st, stats = solver.solve(prob, ap.tree, ap.sla, warm)
+                case = {
+                    "seed": seed,
+                    "ties": ties,
+                    "iterations": int(stats.iterations),
+                    "converged": bool(stats.converged),
+                    "kkt_certified": bool(stats.certified),
+                    "restarts": int(stats.restarts),
+                }
+                if HAVE_SCIPY:
+                    zref = ref_solve(prob, ap.tree, ap.sla)
+                    case["t_err_W"] = abs(float(st.t) - float(zref[-1]))
+                    case["x_err_W"] = float(
+                        np.abs(np.asarray(st.x) - zref[: ap.n]).max()
+                    )
+
+                eng = AllocEngine(pdn, sla=lay.sla_topo(), priority=lay.priority)
+                eng.step(tele)
+                eng.step(tele)  # prime warm variant
+                t0 = time.perf_counter()
+                r = eng.step(tele)
+                case["engine_step_ms"] = 1000 * (time.perf_counter() - t0)
+                case["engine_iterations"] = r.stats["total_iterations"]
+                case["engine_converged"] = r.stats["converged"]
+                cases.append(case)
+
+    max_iters = max(c["iterations"] for c in cases)
+    out = {
+        "cert_budget": CERT_BUDGET,
+        "cases": cases,
+        "max_iterations": max_iters,
+        "engine_step_ms_mean": float(
+            np.mean([c["engine_step_ms"] for c in cases])
+        ),
+        "meets_cert_budget": bool(
+            all(c["converged"] for c in cases) and max_iters <= CERT_BUDGET
+        ),
+        "meets_engine_converged": bool(
+            all(c["engine_converged"] for c in cases)
+        ),
+    }
+    # only emit the quality flag when the HiGHS reference actually ran —
+    # a vacuous True would green-light CI with zero comparisons performed
+    if HAVE_SCIPY:
+        out["meets_optimum_quality"] = bool(
+            all(
+                c["t_err_W"] <= 1e-2 and c["x_err_W"] <= 1e-3 for c in cases
+            )
+        )
+    return out
+
+
+def main() -> None:
+    import argparse
+    import json
+    import os
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--degenerate", action="store_true",
+        help="run only the degenerate certification suite and write "
+        "BENCH_solver.json (the CI bench-smoke job)",
+    )
+    ap.add_argument("--out", default="artifacts/bench")
+    args = ap.parse_args()
+
+    if args.degenerate:
+        res = run_degenerate()
+        os.makedirs(args.out, exist_ok=True)
+        path = os.path.join(args.out, "BENCH_solver.json")
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        print(
+            f"degenerate suite: {len(res['cases'])} cases, max "
+            f"{res['max_iterations']} iters (budget {res['cert_budget']}), "
+            f"engine step {res['engine_step_ms_mean']:.1f}ms, "
+            f"meets_cert_budget={res['meets_cert_budget']}"
+        )
+        print(f"wrote {path}")
+    else:
+        print(json.dumps(run(), indent=1))
+
+
+if __name__ == "__main__":
+    main()

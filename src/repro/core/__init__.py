@@ -14,7 +14,7 @@ from repro.core.metrics import (
     useful_utilization,
 )
 from repro.core.nvpax import AllocResult, NvpaxOptions, optimize
-from repro.core.pdhg import SolverOptions, SolverState
+from repro.core.solver import SolveStats, SolverOptions, SolverState
 from repro.core.problem import AllocProblem, StepProblem
 from repro.core.treeops import SlaTopo, TreeTopo
 from repro.core.waterfill import waterfill
@@ -25,6 +25,7 @@ __all__ = [
     "BatchedAllocResult",
     "NvpaxOptions",
     "SlaTopo",
+    "SolveStats",
     "SolverOptions",
     "SolverState",
     "StepProblem",

@@ -50,7 +50,7 @@ import numpy as np
 from jax import lax
 
 from repro.compat import enable_x64
-from repro.core import pdhg, phases
+from repro.core import phases, solver
 from repro.core.nvpax import NvpaxOptions
 from repro.core.problem import AllocProblem
 from repro.core.waterfill import waterfill_jax
@@ -62,6 +62,8 @@ __all__ = [
     "stack_problems",
     "solve_three_phase",
     "optimize_batched",
+    "PhaseCostModel",
+    "calibrate_phase_cost",
     "calibrate_iter_cost",
 ]
 
@@ -87,11 +89,12 @@ class BatchedStepState(NamedTuple):
     """Carry of the masked scan/while programs (one scenario's solve)."""
 
     x: jnp.ndarray  # [n] current allocation
-    solver: pdhg.SolverState  # warm-started inner-solver state
+    solver: solver.SolverState  # warm-started inner-solver state
     mask: jnp.ndarray  # [n] bool: finalized set (P1) / optimized set (P2, P3)
     solves: jnp.ndarray  # int32: inner solves actually executed
     iterations: jnp.ndarray  # int32: cumulative PDHG iterations
     converged: jnp.ndarray  # bool: all executed solves converged
+    certified: jnp.ndarray  # bool: all executed solves KKT-certified
     done: jnp.ndarray  # bool: early-exit flag (max-min rounds)
 
 
@@ -169,8 +172,8 @@ def stack_problems(aps: Sequence[AllocProblem]) -> AllocProblem:
 def _phase1_scan(
     ap: AllocProblem,
     meta: BatchMeta,
-    opts: pdhg.SolverOptions,
-    warm: pdhg.SolverState,
+    opts: solver.SolverOptions,
+    warm: solver.SolverState,
 ) -> BatchedStepState:
     """Algorithm 1 as a ``lax.scan`` over the static priority levels."""
     n = ap.n
@@ -181,6 +184,7 @@ def _phase1_scan(
         solves=jnp.zeros((), jnp.int32),
         iterations=jnp.zeros((), jnp.int32),
         converged=jnp.asarray(True),
+        certified=jnp.asarray(True),
         done=jnp.asarray(False),
     )
     if not meta.levels:
@@ -193,18 +197,19 @@ def _phase1_scan(
             prob = phases.qp_step(
                 ap, st.x, mask_a, st.mask, meta.eps, pin_free=meta.pin_free
             )
-            solver = pdhg.SolverState(
+            sol = solver.SolverState(
                 st.x, st.solver.t, st.solver.y_tree, st.solver.y_sla, st.solver.y_imp
             )
-            solver, stats = pdhg.solve(prob, ap.tree, ap.sla, solver, opts)
-            x = phases.repair(solver.x, ap, meta.n_depths)
+            sol, stats = solver.solve(prob, ap.tree, ap.sla, sol, opts)
+            x = phases.repair(sol.x, ap, meta.n_depths)
             return BatchedStepState(
                 x=x,
-                solver=solver,
+                solver=sol,
                 mask=st.mask | mask_a,
                 solves=st.solves + 1,
                 iterations=st.iterations + stats.iterations.astype(jnp.int32),
                 converged=st.converged & stats.converged,
+                certified=st.certified & stats.certified,
                 done=st.done,
             )
 
@@ -224,8 +229,8 @@ def _maxmin_loop(
     opt_set: jnp.ndarray,
     free_set: jnp.ndarray,
     meta: BatchMeta,
-    opts: pdhg.SolverOptions,
-    warm: pdhg.SolverState,
+    opts: solver.SolverOptions,
+    warm: solver.SolverState,
     iters_before: jnp.ndarray | None = None,
     budget: jnp.ndarray | None = None,
 ) -> BatchedStepState:
@@ -248,6 +253,7 @@ def _maxmin_loop(
             solves=jnp.zeros((), jnp.int32),
             iterations=jnp.zeros((), jnp.int32),
             converged=jnp.asarray(True),
+            certified=jnp.asarray(True),
             done=jnp.asarray(True),
         )
 
@@ -260,6 +266,7 @@ def _maxmin_loop(
         solves=jnp.zeros((), jnp.int32),
         iterations=jnp.zeros((), jnp.int32),
         converged=jnp.asarray(True),
+        certified=jnp.asarray(True),
         done=jnp.asarray(False),
     )
 
@@ -272,31 +279,32 @@ def _maxmin_loop(
     def body(st: BatchedStepState) -> BatchedStepState:
         mask_f = ~(st.mask | free_set)
         prob = phases.lp_step(ap, st.x, st.mask, mask_f, free_set, meta.eps)
-        solver = pdhg.SolverState(
+        sol = solver.SolverState(
             st.x,
             jnp.zeros((), dtype),
             st.solver.y_tree,
             st.solver.y_sla,
             st.solver.y_imp,
         )
-        solver, stats = pdhg.solve(prob, ap.tree, ap.sla, solver, opts)
+        sol, stats = solver.solve(prob, ap.tree, ap.sla, sol, opts)
         # monotone non-decrease on non-free devices: the dualized
         # improvement rows guarantee it only at convergence, so enforce it
         # against truncated solves (mirrors phases.run_maxmin_phase; keeps
         # Phase I's tenant minimums intact through stalled LP rounds)
-        x_cand = jnp.where(free_set, solver.x, jnp.maximum(solver.x, st.x))
+        x_cand = jnp.where(free_set, sol.x, jnp.maximum(sol.x, st.x))
         x_new = phases.repair(x_cand, ap, meta.n_depths)
         sat = phases.saturated_mask(x_new, ap, st.mask)
         # host driver: stop when no measurable head-room is left AND nothing
         # newly saturated needs freezing
-        done = (solver.t <= phases.SAT_TOL) & ~jnp.any(sat)
+        done = (sol.t <= phases.SAT_TOL) & ~jnp.any(sat)
         return BatchedStepState(
             x=x_new,
-            solver=solver,
+            solver=sol,
             mask=st.mask & ~sat,
             solves=st.solves + 1,
             iterations=st.iterations + stats.iterations.astype(jnp.int32),
             converged=st.converged & stats.converged,
+            certified=st.certified & stats.certified,
             done=done,
         )
 
@@ -306,7 +314,7 @@ def _maxmin_loop(
 def solve_three_phase(
     ap: AllocProblem,
     meta: BatchMeta,
-    opts: pdhg.SolverOptions,
+    opts: solver.SolverOptions,
     warm: phases.WarmCarry | None = None,
     iter_budget: jnp.ndarray | int | None = None,
 ):
@@ -333,28 +341,29 @@ def solve_three_phase(
     """
     n, m, k = ap.n, ap.tree.m, ap.sla.k
     dtype = ap.l.dtype
-    w1 = warm.p1 if warm is not None else pdhg.SolverState.zeros(n, m, k, dtype)
+    w1 = warm.p1 if warm is not None else solver.SolverState.zeros(n, m, k, dtype)
     budget = None if iter_budget is None else jnp.asarray(iter_budget, jnp.int32)
 
     p1 = _phase1_scan(ap, meta, opts, w1)
     x1 = p1.x
     truncated = jnp.asarray(False)
 
-    def skipped(x, solver) -> BatchedStepState:
+    def skipped(x, sol) -> BatchedStepState:
         return BatchedStepState(
             x=x,
-            solver=solver,
+            solver=sol,
             mask=jnp.zeros_like(ap.active),
             solves=jnp.zeros((), jnp.int32),
             iterations=jnp.zeros((), jnp.int32),
             converged=jnp.asarray(True),
+            certified=jnp.asarray(True),
             done=jnp.asarray(False),
         )
 
-    def refine(x, solver, opt_set, free_set, iters_before):
+    def refine(x, sol, opt_set, free_set, iters_before):
         """One budget-gated max-min phase; returns (state, truncated_flag)."""
         if budget is None:
-            st = _maxmin_loop(ap, x, opt_set, free_set, meta, opts, solver)
+            st = _maxmin_loop(ap, x, opt_set, free_set, meta, opts, sol)
             return st, jnp.asarray(False)
         start_ok = iters_before < budget
 
@@ -364,7 +373,7 @@ def solve_three_phase(
                 iters_before, budget,
             )
 
-        st = lax.cond(start_ok, run, lambda args: skipped(*args), (x, solver))
+        st = lax.cond(start_ok, run, lambda args: skipped(*args), (x, sol))
         # cut short: phase never started, or the loop exited on the budget
         # test with unsaturated optimizable devices still holding head-room
         work_left = (~st.done) & jnp.any(st.mask) & (st.solves < meta.max_rounds)
@@ -380,7 +389,8 @@ def solve_three_phase(
         p2 = p1._replace(solver=w2,
                          solves=jnp.zeros((), jnp.int32),
                          iterations=jnp.zeros((), jnp.int32),
-                         converged=jnp.asarray(True))
+                         converged=jnp.asarray(True),
+                         certified=jnp.asarray(True))
         x2 = x1
 
     w3 = phases.merge_warm(p2.solver, warm.p3 if warm is not None else None)
@@ -394,7 +404,8 @@ def solve_three_phase(
         p3 = p2._replace(solver=w3,
                          solves=jnp.zeros((), jnp.int32),
                          iterations=jnp.zeros((), jnp.int32),
-                         converged=jnp.asarray(True))
+                         converged=jnp.asarray(True),
+                         certified=jnp.asarray(True))
         x3 = x2
 
     stats = {
@@ -407,6 +418,7 @@ def solve_three_phase(
         "iterations_p2": p2.iterations,
         "iterations_p3": p3.iterations,
         "converged": p1.converged & p2.converged & p3.converged,
+        "kkt_certified": p1.certified & p2.certified & p3.certified,
         "truncated": truncated,
     }
     carry = phases.WarmCarry(p1.solver, p2.solver, p3.solver)
@@ -417,7 +429,7 @@ def solve_three_phase(
 def _solve_batched(
     stacked: AllocProblem,
     meta: BatchMeta,
-    opts: pdhg.SolverOptions,
+    opts: solver.SolverOptions,
     warm: phases.WarmCarry | None,
     iter_budget: jnp.ndarray | None = None,
 ):
@@ -448,37 +460,119 @@ def _solve_batched(
 # deadline calibration
 # ---------------------------------------------------------------------------
 
-# per-(shape, meta, opts) seconds-per-PDHG-iteration estimates
-_ITER_COST_CACHE: dict[Any, float] = {}
+
+class PhaseCostModel(NamedTuple):
+    """Per-phase seconds-per-PDHG-iteration estimates (ROADMAP item: the
+    uniform cost model erred when phase mixes shifted between calibration
+    and serving).
+
+    ``p1_s`` prices a Phase I (priority-sweep QP) iteration, ``p23_s`` a
+    Phase II/III (saturation-round max-min LP) iteration — the two program
+    shapes differ in per-solve overhead (level scan vs saturation loop,
+    repair cadence), which a single number cannot capture.  ``mix`` is the
+    (phase-1 fraction, phase-2+3 fraction) of iterations observed at
+    calibration; callers with fresher information (e.g. the engine's
+    last-step ``stats["phase_iterations"]``) pass their own mix.
+    """
+
+    p1_s: float
+    p23_s: float
+    mix: tuple[float, float]
+
+    def cost_per_iter(self, mix: tuple[float, float] | None = None) -> float:
+        f1, f23 = self.mix if mix is None else mix
+        tot = max(f1 + f23, 1e-9)
+        return (f1 * self.p1_s + f23 * self.p23_s) / tot
+
+    def budget(
+        self, deadline_s: float, mix: tuple[float, float] | None = None
+    ) -> int:
+        """Wall-clock deadline -> cumulative PDHG iteration budget."""
+        return max(int(float(deadline_s) / self.cost_per_iter(mix)), 0)
+
+    @classmethod
+    def fit(
+        cls,
+        wall_p1: float,
+        phases_p1: Sequence[int],
+        wall_full: float,
+        phases_full: Sequence[int],
+    ) -> "PhaseCostModel":
+        """Fit the two-probe measurement shared by the batched and engine
+        calibrators: a Phase-I-only probe prices the QP sweep directly; the
+        Phase II/III price is the full probe's residual wall time at that
+        QP price, floored at half of it so a noisy subtraction cannot
+        produce a near-zero price (and an exploding budget)."""
+        c1 = wall_p1 / max(phases_p1[0], 1)
+        it23 = phases_full[1] + phases_full[2]
+        if it23 > 0:
+            c23 = max(max(wall_full - c1 * phases_full[0], 0.0) / it23, 0.5 * c1)
+        else:
+            c23 = c1
+        tot = max(sum(phases_full), 1)
+        return cls(p1_s=c1, p23_s=c23, mix=(phases_full[0] / tot, it23 / tot))
 
 
-def calibrate_iter_cost(
+# per-(shape, meta, opts) phase cost models
+_ITER_COST_CACHE: dict[Any, PhaseCostModel] = {}
+
+# effectively-unbounded budget: the full-solve probe runs the same compiled
+# (budgeted) program the deadline path serves, so its timing includes the
+# budget plumbing
+_PROBE_FULL_BUDGET = 2**31 - 1
+
+
+def calibrate_phase_cost(
     stacked: AllocProblem,
     meta: BatchMeta,
-    opts: pdhg.SolverOptions,
-) -> float:
-    """Measured seconds per PDHG iteration of the batched program.
+    opts: solver.SolverOptions,
+) -> PhaseCostModel:
+    """Measured per-phase seconds per PDHG iteration of the batched program.
 
-    Runs a Phase-I-only probe (budget 1 skips both refinement phases) twice —
-    the first call pays the compile — and divides steady wall time by the
-    iterations executed.  The estimate includes per-solve overhead (power
-    iteration, KKT checks), which biases the cost high and therefore the
-    derived budgets low: deadline truncation errs on the early side, like a
-    wall-clock check would.  Cached per (shape, meta, opts).
+    Two probes, each run twice (the first call pays the compile):
+
+    * budget 1 — Phase I only (both refinement phases skipped): prices the
+      QP sweep directly;
+    * unbounded budget — the full three-phase program: the Phase II/III
+      price is the residual wall time after subtracting the Phase I
+      iterations at the QP price.
+
+    Estimates include per-solve overhead (scaling setup, KKT checks), which
+    biases costs high and therefore derived budgets low: deadline truncation
+    errs on the early side, like a wall-clock check would.  Cached per
+    (shape, meta, opts).
     """
     key = (
         tuple(stacked.l.shape), jnp.dtype(stacked.l.dtype).name, meta, opts,
     )
     if key not in _ITER_COST_CACHE:
-        probe_budget = jnp.asarray(1, jnp.int32)
-        _solve_batched(stacked, meta, opts, None, probe_budget)[2].block_until_ready()
-        t0 = time.perf_counter()
-        _, _, x3, _, stats = _solve_batched(stacked, meta, opts, None, probe_budget)
-        x3.block_until_ready()
-        wall = time.perf_counter() - t0
-        iters = int(np.max(np.asarray(stats["iterations"])))
-        _ITER_COST_CACHE[key] = wall / max(iters, 1)
+        def probe(budget):
+            b = jnp.asarray(budget, jnp.int32)
+            _solve_batched(stacked, meta, opts, None, b)[2].block_until_ready()
+            t0 = time.perf_counter()
+            _, _, x3, _, stats = _solve_batched(stacked, meta, opts, None, b)
+            x3.block_until_ready()
+            wall = time.perf_counter() - t0
+            per_phase = [
+                int(np.max(np.asarray(stats[f"iterations_p{i}"])))
+                for i in (1, 2, 3)
+            ]
+            return wall, per_phase
+
+        wall1, phases1 = probe(1)
+        wall_f, phases_f = probe(_PROBE_FULL_BUDGET)
+        _ITER_COST_CACHE[key] = PhaseCostModel.fit(wall1, phases1, wall_f, phases_f)
     return _ITER_COST_CACHE[key]
+
+
+def calibrate_iter_cost(
+    stacked: AllocProblem,
+    meta: BatchMeta,
+    opts: solver.SolverOptions,
+) -> float:
+    """Mix-weighted scalar seconds-per-iteration (compat wrapper around
+    :func:`calibrate_phase_cost`)."""
+    return calibrate_phase_cost(stacked, meta, opts).cost_per_iter()
 
 
 # ---------------------------------------------------------------------------
@@ -530,12 +624,12 @@ def optimize_batched(
         if meta is None:
             meta = batch_meta(stacked, options)
         if iter_budget is None and options.deadline_s is not None:
-            cost = calibrate_iter_cost(stacked, meta, options.solver)
-            iter_budget = max(int(options.deadline_s / cost), 0)
+            model = calibrate_phase_cost(stacked, meta, options.solver)
+            iter_budget = model.budget(options.deadline_s)
         budget = (
             None if iter_budget is None else jnp.asarray(iter_budget, jnp.int32)
         )
-        x1, x2, x3, solver, stats = _solve_batched(
+        x1, x2, x3, sol_state, stats = _solve_batched(
             stacked, meta, options.solver, warm, budget
         )
         x3 = x3.block_until_ready()
@@ -544,7 +638,7 @@ def optimize_batched(
         allocation=np.asarray(x3),
         phase1=np.asarray(x1),
         phase2=np.asarray(x2),
-        warm_state=solver,
+        warm_state=sol_state,
         wall_time_s=wall,
         stats={
             "solves": np.asarray(stats["solves"]),
@@ -554,6 +648,7 @@ def optimize_batched(
                 axis=-1,
             ),
             "converged": np.asarray(stats["converged"]),
+            "kkt_certified": np.asarray(stats["kkt_certified"]),
             "truncated": np.asarray(stats["truncated"]),
             "iter_budget": iter_budget,
             "n_scenarios": int(stacked.l.shape[0]),

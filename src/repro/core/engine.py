@@ -53,8 +53,10 @@ import numpy as np
 from repro.compat import enable_x64
 from repro.core import phases
 from repro.core.batched import (
+    _PROBE_FULL_BUDGET,
     BatchMeta,
     BatchedAllocResult,
+    PhaseCostModel,
     optimize_batched,
     solve_three_phase,
 )
@@ -182,7 +184,7 @@ class AllocEngine:
         self._subtree_lmin = pdn.subtree_min_power()
         self._warm: phases.WarmCarry | None = None
         self._batched_warm: dict[int, Any] = {}
-        self._iter_cost_s: float | None = None
+        self._cost_model: PhaseCostModel | None = None
         self.history: list[dict[str, Any]] = []
 
     def _ctx(self):
@@ -337,36 +339,56 @@ class AllocEngine:
             deadline_s = self.options.deadline_s
         if deadline_s is None:
             return None
-        if self._iter_cost_s is None:
-            self._iter_cost_s = self._calibrate()
-        return max(int(float(deadline_s) / self._iter_cost_s), 0)
+        if self._cost_model is None:
+            self._cost_model = self._calibrate()
+        # price the budget with the phase mix actually served, not the
+        # calibration probe's: the engine's last step is the best predictor
+        # of the next (ROADMAP per-phase deadline-calibration item)
+        mix = None
+        if self.history:
+            pi = self.history[-1].get("phase_iterations")
+            if pi and sum(pi) > 0:
+                tot = float(sum(pi))
+                mix = (pi[0] / tot, (pi[1] + pi[2]) / tot)
+        return self._cost_model.budget(float(deadline_s), mix)
 
-    def _calibrate(self) -> float:
-        """Seconds per PDHG iteration of this engine's compiled step.
+    def _calibrate(self) -> PhaseCostModel:
+        """Per-phase seconds per PDHG iteration of this engine's compiled
+        step (:class:`repro.core.batched.PhaseCostModel`).
 
-        Times a Phase-I-only probe (budget 1) on neutral telemetry, compile
-        excluded.  Like :func:`repro.core.batched.calibrate_iter_cost` the
-        estimate includes per-solve overhead, so deadline budgets err short.
+        Times a Phase-I-only probe (budget 1) and a full-solve probe on
+        neutral telemetry, compile excluded.  Like
+        :func:`repro.core.batched.calibrate_phase_cost` the estimates
+        include per-solve overhead, so deadline budgets err short.
         """
         tele = np.asarray(self.pdn.dev_u, np.float64)
         req, act = self._preprocess(tele, None)
-        with self._ctx():
-            args = (
-                self.fleet,
-                jnp.asarray(req, self.dtype),
-                self.priority,
-                jnp.asarray(act),
-                None,
-                jnp.asarray(1, jnp.int32),
-            )
-            out = _engine_step_jit(*args, meta=self.meta, opts=self.options.solver)
-            out[2].block_until_ready()
-            t0 = time.perf_counter()
-            out = _engine_step_jit(*args, meta=self.meta, opts=self.options.solver)
-            out[2].block_until_ready()
-            wall = time.perf_counter() - t0
-        iters = int(out[4]["iterations"])
-        return wall / max(iters, 1)
+
+        def probe(budget: int):
+            with self._ctx():
+                args = (
+                    self.fleet,
+                    jnp.asarray(req, self.dtype),
+                    self.priority,
+                    jnp.asarray(act),
+                    None,
+                    jnp.asarray(budget, jnp.int32),
+                )
+                out = _engine_step_jit(
+                    *args, meta=self.meta, opts=self.options.solver
+                )
+                out[2].block_until_ready()
+                t0 = time.perf_counter()
+                out = _engine_step_jit(
+                    *args, meta=self.meta, opts=self.options.solver
+                )
+                out[2].block_until_ready()
+                wall = time.perf_counter() - t0
+            return wall, [int(out[4][f"iterations_p{i}"]) for i in (1, 2, 3)]
+
+        wall1, phases1 = probe(1)
+        wall_f, phases_f = probe(_PROBE_FULL_BUDGET)
+        return PhaseCostModel.fit(wall1, phases1, wall_f, phases_f)
 
     # -- single-scenario control step --------------------------------------
 
@@ -416,6 +438,7 @@ class AllocEngine:
                     int(stats[f"iterations_p{i}"]) for i in (1, 2, 3)
                 ],
                 "converged": bool(stats["converged"]),
+                "kkt_certified": bool(stats["kkt_certified"]),
                 "truncated": bool(stats["truncated"]),
                 "iter_budget": budget,
             },

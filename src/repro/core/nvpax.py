@@ -19,7 +19,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compat import enable_x64
-from repro.core import pdhg, phases
+from repro.core import phases
+from repro.core import solver as solver_mod
 from repro.core.problem import AllocProblem
 
 __all__ = ["AllocResult", "NvpaxOptions", "optimize"]
@@ -28,7 +29,7 @@ __all__ = ["AllocResult", "NvpaxOptions", "optimize"]
 @dataclass(frozen=True)
 class NvpaxOptions:
     eps: float = 1e-5  # paper's regularization weight
-    solver: pdhg.SolverOptions = field(default_factory=pdhg.SolverOptions)
+    solver: solver_mod.SolverOptions = field(default_factory=solver_mod.SolverOptions)
     run_phase2: bool = True
     run_phase3: bool = True
     max_rounds: int = phases.MAX_ROUNDS
@@ -126,6 +127,9 @@ def optimize(
             "total_solves": s1.solves + s2.solves + s3.solves,
             "total_iterations": s1.iterations + s2.iterations + s3.iterations,
             "converged": s1.converged and s2.converged and s3.converged,
+            "kkt_certified": s1.kkt_certified
+            and s2.kkt_certified
+            and s3.kkt_certified,
             "truncated": truncated,
         },
     )

@@ -1,530 +1,39 @@
-"""Matrix-free primal-dual solver (PDHG / PDLP-lite) for nvPAX programs.
+"""Backward-compatible import path for the solver core.
 
-The paper solves Phase I with a sparse interior-point QP (Clarabel) and
-Phases II/III with HiGHS — CPU-only machinery built around sparse
-factorizations.  This module is the TPU-native replacement (DESIGN.md
-section 2): a Chambolle-Pock primal-dual iteration whose only non-elementwise
-work is the structured constraint matvec of :mod:`repro.core.treeops`
-(cumsum + gathers + segment sums).  Enhancements follow the PDLP recipe:
-
-* **curvature-aware diagonal primal scaling**: the solve runs in variables
-  ``x = S x~`` with ``s_i = 1/sqrt(w_i)`` for quadratic terms (so every
-  curved variable has unit curvature) and a problem-range scale for linear
-  variables — this is what makes the mixed ``w in {1, eps, 0}`` Phase I QP
-  (request tracking + eps-regularized free devices + pinned devices)
-  converge fast instead of stalling on the eps block;
-* closed-form diagonal row equilibration in the scaled metric (row norms
-  are subtree/tenant sums of ``s^2`` — prefix/segment sums, no sparse
-  matrices);
-* operator-norm estimate by power iteration;
-* iterate averaging with restart-to-the-better-iterate;
-* primal-weight rebalancing from primal/dual travel distances;
-* KKT-based termination (primal residual, dual residual, complementarity),
-  evaluated in the *original* metric so tolerances mean watts.
-
-Everything is a fixed-shape ``lax.while_loop`` / ``lax.scan`` program: the
-solver jits once per (n, m, k) problem shape and is reused across priority
-levels, saturation rounds and control steps (warm-started).
+The monolithic ``repro.core.pdhg`` module was refactored into the
+:mod:`repro.core.solver` package (scaling / restarts / termination / loop);
+this shim keeps the historical import path alive.  New code should import
+from :mod:`repro.core.solver`.
 """
 
-from __future__ import annotations
-
-import functools
-from typing import NamedTuple
-
-import jax
-import jax.numpy as jnp
-from jax import lax
-
-from repro.core.problem import StepProblem
-from repro.core.treeops import (
-    SlaTopo,
-    TreeTopo,
-    sla_matvec,
-    sla_rmatvec,
-    tree_matvec,
-    tree_rmatvec,
+from repro.core.solver import (
+    Scales,
+    SolveStats,
+    SolverOptions,
+    SolverState,
+    StepSizes,
+    estimate_norm,
+    kkt_residuals,
+    make_scales,
+    pc_step_sizes,
+    polish_t,
+    primal_residual,
+    solve,
+    uniform_step_sizes,
 )
 
-__all__ = ["SolverOptions", "SolverState", "SolveStats", "solve", "kkt_residuals"]
-
-
-class SolverOptions(NamedTuple):
-    eps_abs: float = 1e-6
-    eps_rel: float = 1e-6
-    max_iters: int = 50_000
-    check_every: int = 50  # KKT check cadence (iterations)
-    restart_every: int = 8  # restart cadence (in units of check_every)
-    theta: float = 0.9  # step-size safety: tau*sigma*||K||^2 = theta^2
-    omega0: float = 0.0  # initial primal weight; <= 0 -> auto
-    power_iters: int = 40
-    # fused Pallas update kernels (repro.kernels.pdhg_update) for the
-    # n-sized primal/dual blocks of the inner iteration; the tiny SLA block
-    # and the scalar t stay jnp.  Parity with the pure-jnp path is asserted
-    # in tests/test_kernels.py.
-    use_pallas: bool = False
-    # None -> auto: interpret mode off only on TPU (the BlockSpecs are
-    # TPU-shaped; every other backend runs the traced interpreter).
-    pallas_interpret: bool | None = None
-
-
-class SolverState(NamedTuple):
-    """Warm-startable solver state in ORIGINAL units (primal + duals)."""
-
-    x: jnp.ndarray  # [n]
-    t: jnp.ndarray  # scalar
-    y_tree: jnp.ndarray  # [m] duals (original metric)
-    y_sla: jnp.ndarray  # [k]
-    y_imp: jnp.ndarray  # [n]
-
-    @classmethod
-    def zeros(cls, n: int, m: int, k: int, dtype) -> "SolverState":
-        z = functools.partial(jnp.zeros, dtype=dtype)
-        return cls(z((n,)), z(()), z((m,)), z((k,)), z((n,)))
-
-
-class SolveStats(NamedTuple):
-    iterations: jnp.ndarray  # int32
-    primal_res: jnp.ndarray
-    dual_res: jnp.ndarray
-    comp_res: jnp.ndarray
-    converged: jnp.ndarray  # bool
-    omega: jnp.ndarray
-
-
-# ---------------------------------------------------------------------------
-# scaling
-# ---------------------------------------------------------------------------
-
-
-class Scales(NamedTuple):
-    s: jnp.ndarray  # [n] primal variable scales
-    s_t: jnp.ndarray  # scalar: scale of t
-    mov: jnp.ndarray  # [n] 1.0 where the variable can move (lo < hi)
-    t_mov: jnp.ndarray  # scalar 0/1
-    d_tree: jnp.ndarray  # [m] row scales
-    d_sla: jnp.ndarray  # [k]
-    d_imp: jnp.ndarray  # [n]
-
-
-def _make_scales(prob: StepProblem, tree: TreeTopo, sla: SlaTopo) -> Scales:
-    """Curvature-aware primal scales + analytic row equilibration.
-
-    ``s_i = 1/sqrt(w_i)`` gives every quadratic variable unit curvature in
-    the scaled metric; zero-curvature (LP) variables use the problem's
-    power-range scale so primal travel distances are O(1).
-
-    Pinned variables (``lo == hi`` — finalized priority levels, saturated
-    devices, the idle fleet in Phase I) are *folded out of the operator
-    entirely*: their contribution to every constraint row is a constant that
-    the caller moves into the row bounds, and their columns are zeroed via
-    ``mov``.  Without this the operator norm (and therefore the step sizes)
-    is dominated by columns that cannot move — observed as a frozen solver
-    on the 12k-device fleet where ~90% of variables are pinned in Phase I.
-
-    Row norms of the scaled movable constraint matrix are subtree / tenant
-    sums of ``s^2 * mov`` — computable with the same prefix/segment-sum
-    machinery as the matvec itself.
-    """
-    dtype = prob.lo.dtype
-    rng = jnp.where(jnp.isfinite(prob.hi - prob.lo), prob.hi - prob.lo, 0.0)
-    range_scale = jnp.maximum(jnp.max(rng), 1.0)
-    s = jnp.where(prob.w > 0, 1.0 / jnp.sqrt(jnp.maximum(prob.w, 1e-30)), range_scale)
-    s = jnp.minimum(s, range_scale * 1e3)  # cap pathological 1/sqrt(w)
-    # t appears in every active improvement row, giving it a dense column of
-    # norm ~sqrt(n_imp) that would cap everyone's step size; shrink its scale
-    # by 1/sqrt(n_imp) so the scaled column norm is O(1).
-    n_imp = jnp.sum(jnp.isfinite(prob.imp_lo).astype(dtype))
-    s_t = (range_scale / jnp.sqrt(jnp.maximum(n_imp, 1.0))).astype(dtype)
-
-    mov = (prob.hi - prob.lo > 0).astype(dtype)
-    t_mov = (prob.t_hi - prob.t_lo > 0).astype(dtype)
-    s2m = s * s * mov
-    csum = jnp.concatenate([jnp.zeros((1,), dtype), jnp.cumsum(s2m)])
-    tree_norm2 = csum[tree.end] - csum[tree.start]
-    d_tree = lax.rsqrt(jnp.maximum(tree_norm2, 1.0))
-    if sla.k > 0:
-        sla_norm2 = jax.ops.segment_sum(s2m[sla.dev], sla.ten, num_segments=sla.k)
-        d_sla = lax.rsqrt(jnp.maximum(sla_norm2, 1.0))
-    else:
-        d_sla = jnp.zeros((0,), dtype)
-    d_imp = lax.rsqrt(jnp.maximum(s2m + s_t * s_t * t_mov, 1.0))
-    return Scales(s, s_t, mov, t_mov, d_tree, d_sla, d_imp)
-
-
-def _matvec(xs, ts, tree, sla, sc: Scales):
-    """Scaled forward operator D2 K_mov S, split by row block.  Input is the
-    SCALED primal (x~, t~); pinned columns are zeroed (folded into bounds)."""
-    x = sc.s * sc.mov * xs
-    return (
-        sc.d_tree * tree_matvec(x, tree),
-        sc.d_sla * sla_matvec(x, sla),
-        sc.d_imp * (x - sc.s_t * sc.t_mov * ts),
-    )
-
-
-def _rmatvec(y_tree, y_sla, y_imp, tree, sla, sc: Scales, n):
-    """Scaled adjoint S K_mov^T D2 -> (grad on x~, grad on t~)."""
-    yi = sc.d_imp * y_imp
-    gx = tree_rmatvec(sc.d_tree * y_tree, tree, n) + sla_rmatvec(sc.d_sla * y_sla, sla, n) + yi
-    gt = -sc.s_t * sc.t_mov * jnp.sum(yi)
-    return sc.s * sc.mov * gx, gt
-
-
-def _estimate_norm(tree, sla, sc: Scales, n, iters, dtype):
-    """||D2 K S||_2 via power iteration on (D2 K S)^T (D2 K S)."""
-
-    def body(_, v):
-        x, t = v
-        nrm = jnp.sqrt(jnp.sum(x * x) + t * t)
-        x, t = x / nrm, t / nrm
-        a, b, c = _matvec(x, t, tree, sla, sc)
-        return _rmatvec(a, b, c, tree, sla, sc, n)
-
-    x0 = jnp.ones((n,), dtype) / jnp.sqrt(jnp.asarray(n + 1, dtype))
-    t0 = jnp.ones((), dtype) / jnp.sqrt(jnp.asarray(n + 1, dtype))
-    x, t = lax.fori_loop(0, iters, body, (x0, t0))
-    return jnp.sqrt(jnp.sqrt(jnp.sum(x * x) + t * t))  # sqrt of ||K^TK v|| ~ ||K||
-
-
-# ---------------------------------------------------------------------------
-# KKT residuals (original space)
-# ---------------------------------------------------------------------------
-
-
-def kkt_residuals(state: SolverState, prob: StepProblem, tree: TreeTopo, sla: SlaTopo):
-    """(primal, dual, complementarity) infinity-norm residuals, relative.
-
-    ``state`` holds original-space primal and duals.
-    """
-    n = prob.n
-    x, t = state.x, state.t
-    yt, ys, yi = state.y_tree, state.y_sla, state.y_imp
-
-    kx_tree = tree_matvec(x, tree)
-    kx_sla = sla_matvec(x, sla)
-    kx_imp = x - t
-
-    inf = jnp.asarray(jnp.inf, x.dtype)
-
-    def _viol(kx, lo, hi):
-        return jnp.maximum(jnp.maximum(kx - hi, lo - kx), 0.0)
-
-    p_tree = _viol(kx_tree, -inf, prob.tree_hi)
-    p_sla = _viol(kx_sla, prob.sla_lo, prob.sla_hi) if sla.k else jnp.zeros((0,), x.dtype)
-    p_imp = _viol(kx_imp, prob.imp_lo, inf)
-
-    def pmax(v):
-        return jnp.max(v) if v.shape[0] else jnp.asarray(0.0, x.dtype)
-
-    primal = jnp.maximum(jnp.maximum(pmax(p_tree), pmax(p_sla)), pmax(p_imp))
-    p_scale = 1.0 + jnp.maximum(
-        jnp.max(jnp.abs(kx_tree)),
-        jnp.max(jnp.abs(kx_imp)),
-    )
-
-    # dual stationarity on x: s = w (x - target) + c + K^T y, projected on box
-    gx = tree_rmatvec(yt, tree, n) + sla_rmatvec(ys, sla, n) + yi
-    gt = -jnp.sum(yi)
-    s = prob.w * (x - prob.target) + prob.c + gx
-    tol = 1e-9 * (1.0 + jnp.abs(prob.hi))
-    at_lo = x <= prob.lo + tol
-    at_hi = x >= prob.hi - tol
-    dual_x = jnp.where(
-        at_lo & at_hi,
-        0.0,  # pinned variable: any multiplier works
-        jnp.where(at_lo, jnp.maximum(-s, 0.0), jnp.where(at_hi, jnp.maximum(s, 0.0), jnp.abs(s))),
-    )
-    s_t = prob.c_t + gt
-    t_at_lo = t <= prob.t_lo + 1e-12
-    t_at_hi = t >= prob.t_hi - 1e-12
-    dual_t = jnp.where(
-        t_at_lo & t_at_hi,
-        0.0,
-        jnp.where(t_at_lo, jnp.maximum(-s_t, 0.0), jnp.where(t_at_hi, jnp.maximum(s_t, 0.0), jnp.abs(s_t))),
-    )
-    dual = jnp.maximum(jnp.max(dual_x), dual_t)
-    d_scale = 1.0 + jnp.max(jnp.abs(prob.w * (x - prob.target) + prob.c)) + jnp.max(jnp.abs(gx))
-
-    # complementarity: y+ pairs with hi slack, y- with lo slack.  Slack is
-    # clamped to the primal scale so rows with effectively-unbounded caps
-    # (slack >> |Kx|) don't demand y == 0 to machine precision.
-    def _comp(y, kx, lo, hi):
-        if y.shape[0] == 0:
-            return jnp.asarray(0.0, x.dtype)
-        slack_cap = 1.0 + jnp.abs(kx)
-        hi_slack = jnp.where(jnp.isfinite(hi), jnp.minimum(jnp.maximum(hi - kx, 0.0), slack_cap), 0.0)
-        lo_slack = jnp.where(jnp.isfinite(lo), jnp.minimum(jnp.maximum(kx - lo, 0.0), slack_cap), 0.0)
-        c = jnp.maximum(y, 0.0) * hi_slack + jnp.maximum(-y, 0.0) * lo_slack
-        return jnp.max(c)
-
-    comp = jnp.maximum(
-        jnp.maximum(
-            _comp(yt, kx_tree, jnp.full_like(prob.tree_hi, -inf), prob.tree_hi),
-            _comp(ys, kx_sla, prob.sla_lo, prob.sla_hi),
-        ),
-        _comp(yi, kx_imp, prob.imp_lo, jnp.full_like(prob.imp_lo, inf)),
-    )
-    c_scale = p_scale * (1.0 + jnp.maximum(jnp.max(jnp.abs(yt)), jnp.max(jnp.abs(yi))))
-    return primal / p_scale, dual / d_scale, comp / c_scale
-
-
-# ---------------------------------------------------------------------------
-# main solve
-# ---------------------------------------------------------------------------
-
-
-def _dual_prox(z, sigma, lo, hi):
-    """prox of sigma * g* for g = indicator[lo, hi]:  z - sigma*clip(z/sigma)."""
-    return z - sigma * jnp.clip(z / sigma, lo, hi)
-
-
-@functools.partial(jax.jit, static_argnames=("opts",))
-def solve(
-    prob: StepProblem,
-    tree: TreeTopo,
-    sla: SlaTopo,
-    init: SolverState,
-    opts: SolverOptions = SolverOptions(),
-) -> tuple[SolverState, SolveStats]:
-    """Solve one unified QP/LP.  Returns (state, stats); ``state.x`` is the
-    allocation *before* the exact feasibility repair done by the caller."""
-    n = prob.n
-    dtype = prob.lo.dtype
-    m, k = tree.m, sla.k
-    inf = jnp.asarray(jnp.inf, dtype)
-
-    sc = _make_scales(prob, tree, sla)
-    knorm = _estimate_norm(tree, sla, sc, n, opts.power_iters, dtype)
-    knorm = jnp.maximum(knorm, 1e-6)
-
-    # problem data in the scaled metric
-    w_s = prob.w * sc.s * sc.s  # 1 for curved vars, 0 for linear
-    target_s = prob.target / sc.s
-    c_s = prob.c * sc.s
-    ct_s = prob.c_t * sc.s_t
-    lo_s = prob.lo / sc.s
-    hi_s = prob.hi / sc.s
-    tlo_s = prob.t_lo / sc.s_t
-    thi_s = prob.t_hi / sc.s_t
-
-    # fold pinned-variable contributions into the row bounds (their columns
-    # are zeroed in the scaled operator; see _make_scales)
-    pin_x = jnp.where(sc.mov > 0, 0.0, prob.lo)
-    pin_t = jnp.where(sc.t_mov > 0, 0.0, prob.t_lo)
-    kpin_tree = tree_matvec(pin_x, tree)
-    kpin_sla = sla_matvec(pin_x, sla)
-    kpin_imp = pin_x - pin_t
-
-    # scaled, pin-folded row bounds
-    tree_hi_s = sc.d_tree * (prob.tree_hi - kpin_tree)
-    sla_lo_s = sc.d_sla * (prob.sla_lo - kpin_sla)
-    sla_hi_s = sc.d_sla * (prob.sla_hi - kpin_sla)
-    imp_lo_s = jnp.where(
-        jnp.isfinite(prob.imp_lo), sc.d_imp * (prob.imp_lo - kpin_imp), -inf
-    )
-    neg_inf_tree = jnp.full((m,), -inf, dtype)
-    pos_inf_imp = jnp.full((n,), inf, dtype)
-
-    theta = jnp.asarray(opts.theta, dtype)
-
-    if opts.use_pallas:
-        from repro.kernels.pdhg_update import ops as _pk
-
-        interpret = (
-            _pk.default_interpret()
-            if opts.pallas_interpret is None
-            else opts.pallas_interpret
-        )
-
-    def pdhg_iter(carry, _):
-        x, t, y_tree, y_sla, y_imp, omega = carry
-        tau = theta * omega / knorm
-        sigma = theta / (omega * knorm)
-        gx, gt = _rmatvec(y_tree, y_sla, y_imp, tree, sla, sc, n)
-        if opts.use_pallas:
-            # fused primal prox + extrapolation, one HBM round-trip
-            x1, xe = _pk.primal_update(
-                x, gx, c_s, w_s, target_s, lo_s, hi_s, tau, interpret=interpret
-            )
-        else:
-            # primal prox (diagonal quadratic + box)
-            x1 = jnp.clip(
-                (x - tau * (gx + c_s) + tau * w_s * target_s) / (1.0 + tau * w_s),
-                lo_s,
-                hi_s,
-            )
-            xe = 2.0 * x1 - x
-        t1 = jnp.clip(t - tau * (gt + ct_s), tlo_s, thi_s)
-        # dual with extrapolation
-        te = 2.0 * t1 - t
-        a_tree, a_sla, a_imp = _matvec(xe, te, tree, sla, sc)
-        if opts.use_pallas:
-            y_tree1 = _pk.dual_prox(
-                y_tree, a_tree, sigma, neg_inf_tree, tree_hi_s, interpret=interpret
-            )
-            y_imp1 = _pk.dual_prox(
-                y_imp, a_imp, sigma, imp_lo_s, pos_inf_imp, interpret=interpret
-            )
-        else:
-            y_tree1 = _dual_prox(y_tree + sigma * a_tree, sigma, neg_inf_tree, tree_hi_s)
-            y_imp1 = _dual_prox(y_imp + sigma * a_imp, sigma, imp_lo_s, pos_inf_imp)
-        y_sla1 = (
-            _dual_prox(y_sla + sigma * a_sla, sigma, sla_lo_s, sla_hi_s)
-            if k
-            else y_sla
-        )
-        return (x1, t1, y_tree1, y_sla1, y_imp1, omega), None
-
-    def run_chunk(state6):
-        """opts.check_every PDHG iterations."""
-        out, _ = lax.scan(pdhg_iter, state6, None, length=opts.check_every)
-        return out
-
-    def unscale(x, t, yt, ys, yi):
-        # original metric: x = S x~ (pinned vars pinned by their box),
-        # y_orig = D2 y~
-        return SolverState(
-            jnp.where(sc.mov > 0, sc.s * x, prob.lo),
-            jnp.where(sc.t_mov > 0, sc.s_t * t, prob.t_lo),
-            sc.d_tree * yt,
-            sc.d_sla * ys,
-            sc.d_imp * yi,
-        )
-
-    def kkt_of(x, t, yt, ys, yi):
-        return kkt_residuals(unscale(x, t, yt, ys, yi), prob, tree, sla)
-
-    eps = jnp.asarray(opts.eps_abs, dtype)
-    eps_rel = jnp.asarray(opts.eps_rel, dtype)
-
-    n_chunks = opts.max_iters // opts.check_every
-
-    class Carry(NamedTuple):
-        x: jnp.ndarray
-        t: jnp.ndarray
-        y_tree: jnp.ndarray
-        y_sla: jnp.ndarray
-        y_imp: jnp.ndarray
-        omega: jnp.ndarray
-        # averaging since last restart
-        ax: jnp.ndarray
-        at: jnp.ndarray
-        ayt: jnp.ndarray
-        ays: jnp.ndarray
-        ayi: jnp.ndarray
-        acount: jnp.ndarray
-        # restart anchors (for primal-weight travel ratio)
-        rx: jnp.ndarray
-        ry_tree: jnp.ndarray
-        ry_imp: jnp.ndarray
-        chunk: jnp.ndarray
-        pres: jnp.ndarray
-        dres: jnp.ndarray
-        cres: jnp.ndarray
-        done: jnp.ndarray
-
-    # In the scaled metric curvature is 1 and variable travel is O(1), so
-    # omega = 1 is the natural start for both QP and LP; adaptive
-    # rebalancing refines it.
-    init_omega = (
-        jnp.asarray(opts.omega0, dtype) if opts.omega0 > 0 else jnp.asarray(1.0, dtype)
-    )
-    # scale the warm-start state into the solve metric
-    x0 = init.x / sc.s
-    t0 = init.t / sc.s_t
-    yt0 = init.y_tree / jnp.maximum(sc.d_tree, 1e-30)
-    ys0 = init.y_sla / jnp.maximum(sc.d_sla, 1e-30) if k else init.y_sla
-    yi0 = init.y_imp / jnp.maximum(sc.d_imp, 1e-30)
-    c0 = Carry(
-        x=x0, t=t0, y_tree=yt0, y_sla=ys0, y_imp=yi0,
-        omega=init_omega,
-        ax=jnp.zeros_like(x0), at=jnp.zeros_like(t0),
-        ayt=jnp.zeros_like(yt0), ays=jnp.zeros_like(ys0),
-        ayi=jnp.zeros_like(yi0), acount=jnp.zeros((), dtype),
-        rx=x0, ry_tree=yt0, ry_imp=yi0,
-        chunk=jnp.zeros((), jnp.int32),
-        pres=jnp.asarray(jnp.inf, dtype), dres=jnp.asarray(jnp.inf, dtype),
-        cres=jnp.asarray(jnp.inf, dtype),
-        done=jnp.asarray(False),
-    )
-
-    def cond(c: Carry):
-        return (~c.done) & (c.chunk < n_chunks)
-
-    def body(c: Carry):
-        x, t, yt, ys, yi, om = run_chunk((c.x, c.t, c.y_tree, c.y_sla, c.y_imp, c.omega))
-        cnt = c.acount + 1.0
-        ax, at_ = c.ax + x, c.at + t
-        ayt, ays, ayi = c.ayt + yt, c.ays + ys, c.ayi + yi
-
-        p, d, cm = kkt_of(x, t, yt, ys, yi)
-        score = jnp.maximum(jnp.maximum(p, d), cm)
-        done = (p < eps + eps_rel) & (d < eps + eps_rel) & (cm < eps + eps_rel)
-
-        chunk = c.chunk + 1
-        do_restart = (chunk % opts.restart_every == 0) & (~done)
-
-        def restart(args):
-            x, t, yt, ys, yi, om = args
-            # candidate: running average
-            xa, ta = ax / cnt, at_ / cnt
-            yta, ysa, yia = ayt / cnt, ays / cnt, ayi / cnt
-            pa, da, ca = kkt_of(xa, ta, yta, ysa, yia)
-            score_a = jnp.maximum(jnp.maximum(pa, da), ca)
-            use_avg = score_a < score
-            xn = jnp.where(use_avg, xa, x)
-            tn = jnp.where(use_avg, ta, t)
-            ytn = jnp.where(use_avg, yta, yt)
-            ysn = jnp.where(use_avg, ysa, ys) if k else ys
-            yin = jnp.where(use_avg, yia, yi)
-            # primal-weight rebalancing from travel distances since anchor.
-            # Our convention is tau ∝ omega, so omega* ≈ dx/dy: a primal
-            # iterate that must travel far relative to the dual gets a larger
-            # primal step (PDLP's update with its ratio inverted to match).
-            dx = jnp.sqrt(jnp.sum((xn - c.rx) ** 2))
-            dy = jnp.sqrt(jnp.sum((ytn - c.ry_tree) ** 2) + jnp.sum((yin - c.ry_imp) ** 2))
-            moved = (dx > 1e-10) & (dy > 1e-10)
-            om_new = jnp.where(
-                moved,
-                jnp.exp(0.5 * jnp.log(dx / jnp.maximum(dy, 1e-30)) + 0.5 * jnp.log(om)),
-                om,
-            )
-            # rate-limit: an omega crash from one noisy travel ratio destroys
-            # far more progress than a slightly-stale omega (observed as
-            # oscillating residuals on the 12k-device fleet).
-            om_new = jnp.clip(om_new, om / 4.0, om * 4.0)
-            om_new = jnp.clip(om_new, 1e-5, 1e5)
-            return xn, tn, ytn, ysn, yin, om_new
-
-        def no_restart(args):
-            return args
-
-        x, t, yt, ys, yi, om = lax.cond(do_restart, restart, no_restart, (x, t, yt, ys, yi, om))
-        reset = do_restart
-
-        def zf(arr):
-            return jnp.where(reset, jnp.zeros_like(arr), arr)
-
-        return Carry(
-            x=x, t=t, y_tree=yt, y_sla=ys, y_imp=yi, omega=om,
-            ax=zf(ax), at=zf(at_), ayt=zf(ayt), ays=zf(ays), ayi=zf(ayi),
-            acount=jnp.where(reset, 0.0, cnt),
-            rx=jnp.where(reset, x, c.rx),
-            ry_tree=jnp.where(reset, yt, c.ry_tree),
-            ry_imp=jnp.where(reset, yi, c.ry_imp),
-            chunk=chunk, pres=p, dres=d, cres=cm, done=done,
-        )
-
-    final = lax.while_loop(cond, body, c0)
-    # return state in original units
-    state = unscale(final.x, final.t, final.y_tree, final.y_sla, final.y_imp)
-    stats = SolveStats(
-        iterations=final.chunk * opts.check_every,
-        primal_res=final.pres,
-        dual_res=final.dres,
-        comp_res=final.cres,
-        converged=final.done,
-        omega=final.omega,
-    )
-    return state, stats
+__all__ = [
+    "Scales",
+    "SolveStats",
+    "SolverOptions",
+    "SolverState",
+    "StepSizes",
+    "estimate_norm",
+    "kkt_residuals",
+    "make_scales",
+    "pc_step_sizes",
+    "polish_t",
+    "primal_residual",
+    "solve",
+    "uniform_step_sizes",
+]

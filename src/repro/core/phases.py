@@ -2,7 +2,7 @@
 saturation detection.
 
 Orchestration is host-level Python (priority sweep, saturation rounds); the
-inner convex solves are the single jitted program of :mod:`repro.core.pdhg`,
+inner convex solves are the single jitted program of :mod:`repro.core.solver`,
 warm-started across rounds.  A fully-jitted variant for batched/vmapped
 evaluation lives in :mod:`repro.core.batched`.
 """
@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core import pdhg
+from repro.core import solver
 from repro.core.problem import INF, AllocProblem, StepProblem
 from repro.core.treeops import sla_matvec, sla_rmatvec, tree_matvec, tree_rmatvec
 
@@ -42,6 +42,9 @@ class PhaseStats(NamedTuple):
     iterations: int
     converged: bool
     max_primal_res: float
+    # every inner solve exited KKT-certified (False when any solve exited on
+    # the no-progress/optimal-vertex certificate — see solver.termination)
+    kkt_certified: bool = True
 
 
 class WarmCarry(NamedTuple):
@@ -58,29 +61,29 @@ class WarmCarry(NamedTuple):
     iteration counts on drifting telemetry (asserted in
     ``tests/test_engine.py``).
 
-    A pytree of :class:`repro.core.pdhg.SolverState` leaves, so the same
+    A pytree of :class:`repro.core.solver.SolverState` leaves, so the same
     carry works for the host driver (:func:`repro.core.nvpax.optimize`), the
     fully-jitted engine, and the vmapped batched path (``[K, ...]`` leaves).
     """
 
-    p1: pdhg.SolverState
-    p2: pdhg.SolverState
-    p3: pdhg.SolverState
+    p1: solver.SolverState
+    p2: solver.SolverState
+    p3: solver.SolverState
 
     @classmethod
     def zeros(cls, n: int, m: int, k: int, dtype) -> "WarmCarry":
-        z = pdhg.SolverState.zeros(n, m, k, dtype)
+        z = solver.SolverState.zeros(n, m, k, dtype)
         return cls(z, z, z)
 
 
 def merge_warm(
-    chain: pdhg.SolverState, carry: pdhg.SolverState | None
-) -> pdhg.SolverState:
+    chain: solver.SolverState, carry: solver.SolverState | None
+) -> solver.SolverState:
     """Phase-matched warm start: primal (and t) chain within the step; duals
     come from the same phase's end state at the previous control step."""
     if carry is None:
         return chain
-    return pdhg.SolverState(
+    return solver.SolverState(
         chain.x, chain.t, carry.y_tree, carry.y_sla, carry.y_imp
     )
 
@@ -263,14 +266,14 @@ def lp_step(
 
 def phase1(
     ap: AllocProblem,
-    opts: pdhg.SolverOptions,
+    opts: solver.SolverOptions,
     eps: float = 1e-5,
-    warm: pdhg.SolverState | None = None,
-) -> tuple[jnp.ndarray, pdhg.SolverState, PhaseStats]:
+    warm: solver.SolverState | None = None,
+) -> tuple[jnp.ndarray, solver.SolverState, PhaseStats]:
     """Algorithm 1: priority-ordered request satisfaction."""
     n, m, k = ap.n, ap.tree.m, ap.sla.k
     dtype = ap.l.dtype
-    state = warm if warm is not None else pdhg.SolverState.zeros(n, m, k, dtype)
+    state = warm if warm is not None else solver.SolverState.zeros(n, m, k, dtype)
     x = ap.l
     finalized = jnp.zeros((n,), bool)
     # Sweep order and the pin-free simplification (paper 4.3.1) come from the
@@ -281,20 +284,21 @@ def phase1(
     pin_free = ap.pin_free_ok()
     n_depths = ap.n_tree_depths()
     solves = iters = 0
-    conv = True
+    conv = cert = True
     maxres = 0.0
     for p in levels:
         mask_a = ap.active & (ap.priority == p)
         prob = qp_step(ap, x, mask_a, finalized, eps, pin_free=pin_free)
-        state = pdhg.SolverState(x, state.t, state.y_tree, state.y_sla, state.y_imp)
-        state, stats = pdhg.solve(prob, ap.tree, ap.sla, state, opts)
+        state = solver.SolverState(x, state.t, state.y_tree, state.y_sla, state.y_imp)
+        state, stats = solver.solve(prob, ap.tree, ap.sla, state, opts)
         x = repair(state.x, ap, n_depths)
         finalized = finalized | mask_a
         solves += 1
         iters += int(stats.iterations)
         conv &= bool(stats.converged)
+        cert &= bool(stats.certified)
         maxres = max(maxres, float(stats.primal_res))
-    return x, state, PhaseStats(solves, iters, conv, maxres)
+    return x, state, PhaseStats(solves, iters, conv, maxres, cert)
 
 
 def run_maxmin_phase(
@@ -302,12 +306,12 @@ def run_maxmin_phase(
     x: jnp.ndarray,
     opt_set: jnp.ndarray,
     free_set: jnp.ndarray,
-    opts: pdhg.SolverOptions,
+    opts: solver.SolverOptions,
     eps: float = 1e-5,
-    warm: pdhg.SolverState | None = None,
+    warm: solver.SolverState | None = None,
     max_rounds: int = MAX_ROUNDS,
     use_waterfill: bool = True,
-) -> tuple[jnp.ndarray, pdhg.SolverState, PhaseStats]:
+) -> tuple[jnp.ndarray, solver.SolverState, PhaseStats]:
     """Algorithm 2: iterated max-min LP with saturation detection.
 
     Phase II: ``opt_set`` = active, ``free_set`` = idle.
@@ -331,12 +335,12 @@ def run_maxmin_phase(
             np.asarray(x),
             np.asarray(opt_set),
         )
-        state = warm if warm is not None else pdhg.SolverState.zeros(
+        state = warm if warm is not None else solver.SolverState.zeros(
             n, m, k, ap.l.dtype
         )
         return jnp.asarray(x_wf), state, PhaseStats(0, 0, True, 0.0)
     dtype = ap.l.dtype
-    state = warm if warm is not None else pdhg.SolverState.zeros(n, m, k, dtype)
+    state = warm if warm is not None else solver.SolverState.zeros(n, m, k, dtype)
     # Devices with no slack at entry (e.g. already at u after Phase I, or under
     # a cap Phase I left tight) must be frozen before the first round —
     # otherwise they force t* = 0 and the eps-term would distribute surplus
@@ -344,15 +348,15 @@ def run_maxmin_phase(
     mask_a = opt_set & ~saturated_mask(x, ap, opt_set)
     n_depths = ap.n_tree_depths()
     solves = iters = 0
-    conv = True
+    conv = cert = True
     maxres = 0.0
     for _ in range(max_rounds):
         if not bool(np.asarray(mask_a).any()):
             break
         mask_f = ~(mask_a | free_set)
         prob = lp_step(ap, x, mask_a, mask_f, free_set, eps)
-        state = pdhg.SolverState(x, jnp.zeros((), dtype), state.y_tree, state.y_sla, state.y_imp)
-        state, stats = pdhg.solve(prob, ap.tree, ap.sla, state, opts)
+        state = solver.SolverState(x, jnp.zeros((), dtype), state.y_tree, state.y_sla, state.y_imp)
+        state, stats = solver.solve(prob, ap.tree, ap.sla, state, opts)
         # The exact max-min iteration never moves a non-free device below
         # its round-entry value (improvement rows force x >= base + t,
         # t >= 0), but those rows are dualized: a truncated solve can leave
@@ -363,6 +367,7 @@ def run_maxmin_phase(
         solves += 1
         iters += int(stats.iterations)
         conv &= bool(stats.converged)
+        cert &= bool(stats.certified)
         maxres = max(maxres, float(stats.primal_res))
         sat = saturated_mask(x_new, ap, mask_a)
         t_star = float(state.t)
@@ -371,4 +376,4 @@ def run_maxmin_phase(
         if t_star <= SAT_TOL and no_new_sat:
             break  # no measurable head-room left and nothing to freeze
         mask_a = mask_a & ~sat
-    return x, state, PhaseStats(solves, iters, conv, maxres)
+    return x, state, PhaseStats(solves, iters, conv, maxres, cert)

@@ -6,7 +6,7 @@ Two levels:
   requests, priorities, active/idle), PDN topology, tenant SLAs.  Built once
   per control step from host-side numpy (see :mod:`repro.pdn`).
 * :class:`StepProblem` — one convex program in the unified QP/LP form solved
-  by :mod:`repro.core.pdhg`:
+  by :mod:`repro.core.solver`:
 
       minimize   0.5 * sum_i w_i (x_i - target_i)^2  +  c.x  +  c_t * t
       subject to lo <= x <= hi,  t_lo <= t <= t_hi,

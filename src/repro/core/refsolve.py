@@ -4,8 +4,10 @@ The paper solves Phase I with Clarabel (interior-point QP) and Phases II/III
 with HiGHS.  scipy's ``linprog`` *is* HiGHS, so the LP reference here is the
 paper's own engine; the QP reference uses ``scipy.optimize.minimize``
 (trust-constr) on the same constraint set.  These are used (a) in tests as
-oracles for the PDHG solver and (b) as the "paper-faithful baseline"
-measured in EXPERIMENTS.md §Perf.  Dense matrices — small/medium n only.
+oracles for the :mod:`repro.core.solver` package (including the degenerate
+geometries where PDHG certification historically stalled) and (b) as the
+"paper-faithful baseline" measured in EXPERIMENTS.md §Perf.  Dense matrices
+— small/medium n only.
 """
 
 from __future__ import annotations

@@ -1,0 +1,123 @@
+"""Adaptive restart policy (PDLP-style) for the PDHG loop.
+
+The loop evaluates the KKT score (max of the three relative residuals) of
+the current iterate and of the running average at every check, takes the
+better of the two as the *restart candidate*, and asks
+:func:`restart_decision` whether to restart to it.  Three triggers:
+
+* **sufficient decay** — the candidate improved on the score at the last
+  restart by ``beta_suff``: lock the progress in;
+* **necessary decay + stall** — improved by ``beta_nec`` but got *worse*
+  since the previous check: the iterate is orbiting, adopt the candidate
+  before it drifts away;
+* **stall / artificial** — ``stall_checks`` consecutive checks without any
+  score improvement, or ``restart_every`` chunks since the last restart,
+  whichever comes first.  The stall trigger is what rescues degenerate LPs:
+  their score freezes entirely, so neither decay trigger can fire, and every
+  restart re-estimates the primal weight (below) — repeated restarts walk
+  omega to the dual-favoring regime that actually certifies.
+
+On restart the primal weight is re-estimated from the primal/dual travel
+distances since the last restart anchor (:func:`update_omega`).  Unlike the
+pre-overhaul rule, a frozen primal (``dx = 0``) is *not* a reason to keep
+omega: it is the strongest possible signal that the primal step is too
+large relative to the dual step, so the ratio update must run — the travel
+distances are floored, turning ``dx = 0`` into the maximal allowed
+(rate-limited) decrease.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["restart_decision", "update_omega"]
+
+
+def restart_decision(
+    score_cand,
+    score_prev,
+    score_restart,
+    chunks_since,
+    stall_count,
+    *,
+    beta_suff: float,
+    beta_nec: float,
+    stall_checks: int,
+    restart_every: int,
+    adaptive: bool,
+):
+    """Decide whether to restart; returns
+    ``(do_restart, new_stall_count, stalled)``.
+
+    All inputs are traced scalars except the static policy knobs.
+    ``score_prev`` is the candidate score at the previous check;
+    ``score_restart`` the score right after the last restart;
+    ``chunks_since`` counts checks since that restart.  ``stalled`` reports
+    that the stall detector (not a decay trigger) fired — the primal-weight
+    update switches to residual balance in that case (see
+    :func:`update_omega`).
+    """
+    # "no improvement" leaves a little room for residual noise: a 0.1%
+    # decay per 50-iteration chunk still means >= 10x over 5k iterations
+    stalled_now = score_cand >= 0.999 * score_prev
+    stall_count = jnp.where(stalled_now, stall_count + 1, 0)
+    artificial = chunks_since >= restart_every
+    if not adaptive:
+        no = jnp.asarray(False)
+        return artificial, jnp.where(artificial, 0, stall_count), no
+    # the decay triggers compare against the score at the last restart;
+    # before any restart has anchored it (inf), only the stall/artificial
+    # triggers may fire — otherwise every solve would restart at the very
+    # first check and re-estimate omega from one chunk's travel noise
+    anchored = jnp.isfinite(score_restart)
+    sufficient = anchored & (score_cand <= beta_suff * score_restart)
+    necessary = (
+        anchored
+        & (score_cand <= beta_nec * score_restart)
+        & (score_cand > score_prev)
+    )
+    stalled = stall_count >= stall_checks
+    do = sufficient | necessary | stalled | artificial
+    return do, jnp.where(do, 0, stall_count), stalled
+
+
+def update_omega(omega, dx, dy, pres, dres, cres, stalled):
+    """Primal-weight update: travel-ratio normally, residual-balance on
+    stall.
+
+    Our convention is ``tau ∝ omega``: a primal iterate that must travel far
+    relative to the dual gets a larger primal step, so ``omega* ≈ dx/dy``
+    (PDLP's update with its ratio inverted to match), smoothed in log space.
+    Travel distances are floored rather than gated: a frozen side is a
+    signal, not noise (see module docstring).
+
+    The travel ratio has a failure mode on *stalled* solves: an iterate
+    oscillating around infeasibility reads as "primal moving, dual still",
+    which walks omega toward the primal-favoring cap and freezes the very
+    duals that need to unwind — observed on warm starts whose carried duals
+    a topology derate has invalidated (comp residual ~1e2 while the dual
+    residual is ~1e-10).  When the restart was triggered by the stall
+    detector, the update therefore switches to *residual balance*: the side
+    with the larger residual gets the larger step,
+    ``omega* = omega * sqrt(dres / max(pres, cres))`` — which also walks the
+    degenerate max-min LPs (primal frozen ON the optimum, duals
+    tugging-of-war) into the dual-favoring regime that certifies them.
+
+    The 4x rate limit keeps one noisy ratio from destroying more progress
+    than a stale omega would (observed as oscillating residuals on the
+    12k-device fleet), and the global clip bounds runaway adaptation.
+    """
+    tiny = jnp.asarray(1e-10, omega.dtype)
+    moved = (dx > tiny) | (dy > tiny)
+    travel = jnp.maximum(dx, tiny) / jnp.maximum(dy, tiny)
+    balance = jnp.sqrt(
+        jnp.maximum(dres, tiny) / jnp.maximum(jnp.maximum(pres, cres), tiny)
+    )
+    ratio = jnp.where(stalled, balance, travel)
+    om_new = jnp.where(
+        moved | stalled,
+        jnp.exp(0.5 * jnp.log(ratio) + 0.5 * jnp.log(omega)),
+        omega,
+    )
+    om_new = jnp.clip(om_new, omega / 4.0, omega * 4.0)
+    return jnp.clip(om_new, 1e-5, 1e5)

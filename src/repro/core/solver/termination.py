@@ -1,0 +1,182 @@
+"""Termination criteria: KKT certification, primal feasibility, and the
+no-progress / optimal-vertex certificate.
+
+The overhaul separates two exits that the old solver conflated:
+
+* **KKT certified** — primal residual, dual residual and complementarity all
+  below tolerance in the original metric (tolerances mean watts).  This is
+  the certificate the paper's solvers emit.
+
+* **Optimal vertex reached** (:func:`polish_t` + the no-progress counter in
+  the loop) — on degenerate max-min LPs (caps exactly equal to subtree
+  maxima, eps-tie-broken objectives) the primal lands on the optimal vertex
+  within a few thousand iterations while the duals tug-of-war: the violated
+  improvement rows pull their multipliers down exactly as fast as the slack
+  rows release theirs, ``sum(y_imp)`` stays pinned at ``c_t``, and the
+  scalar ``t`` freezes above its optimum — for tens of thousands of
+  iterations the KKT residuals do not move.  When the primal iterate has
+  been motionless for ``noprogress_patience`` consecutive checks and the
+  t-polished point is primal-feasible, the solver exits with
+  ``converged=True, certified=False`` instead of burning ``max_iters``.
+  ``t`` is exact at the exit: given the settled ``x``, the max-min LP's
+  optimal scalar is ``clip(min_i(x_i - imp_lo_i), t_lo, t_hi)`` in closed
+  form (``t`` only appears in the improvement rows and its box).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.problem import StepProblem
+from repro.core.solver.options import SolverState
+from repro.core.treeops import (
+    SlaTopo,
+    TreeTopo,
+    sla_matvec,
+    sla_rmatvec,
+    tree_matvec,
+    tree_rmatvec,
+)
+
+__all__ = ["kkt_residuals", "primal_residual", "polish_t"]
+
+
+def kkt_residuals(state: SolverState, prob: StepProblem, tree: TreeTopo, sla: SlaTopo):
+    """(primal, dual, complementarity) infinity-norm residuals, relative.
+
+    ``state`` holds original-space primal and duals.
+    """
+    n = prob.n
+    x, t = state.x, state.t
+    yt, ys, yi = state.y_tree, state.y_sla, state.y_imp
+
+    kx_tree = tree_matvec(x, tree)
+    kx_sla = sla_matvec(x, sla)
+    kx_imp = x - t
+
+    inf = jnp.asarray(jnp.inf, x.dtype)
+
+    def _viol(kx, lo, hi):
+        return jnp.maximum(jnp.maximum(kx - hi, lo - kx), 0.0)
+
+    p_tree = _viol(kx_tree, -inf, prob.tree_hi)
+    p_sla = (
+        _viol(kx_sla, prob.sla_lo, prob.sla_hi)
+        if sla.k
+        else jnp.zeros((0,), x.dtype)
+    )
+    p_imp = _viol(kx_imp, prob.imp_lo, inf)
+
+    def pmax(v):
+        return jnp.max(v) if v.shape[0] else jnp.asarray(0.0, x.dtype)
+
+    primal = jnp.maximum(jnp.maximum(pmax(p_tree), pmax(p_sla)), pmax(p_imp))
+    p_scale = 1.0 + jnp.maximum(
+        jnp.max(jnp.abs(kx_tree)),
+        jnp.max(jnp.abs(kx_imp)),
+    )
+
+    # dual stationarity on x: s = w (x - target) + c + K^T y, projected on box
+    gx = tree_rmatvec(yt, tree, n) + sla_rmatvec(ys, sla, n) + yi
+    gt = -jnp.sum(yi)
+    s = prob.w * (x - prob.target) + prob.c + gx
+    tol = 1e-9 * (1.0 + jnp.abs(prob.hi))
+    at_lo = x <= prob.lo + tol
+    at_hi = x >= prob.hi - tol
+    dual_x = jnp.where(
+        at_lo & at_hi,
+        0.0,  # pinned variable: any multiplier works
+        jnp.where(
+            at_lo,
+            jnp.maximum(-s, 0.0),
+            jnp.where(at_hi, jnp.maximum(s, 0.0), jnp.abs(s)),
+        ),
+    )
+    s_t = prob.c_t + gt
+    t_at_lo = t <= prob.t_lo + 1e-12
+    t_at_hi = t >= prob.t_hi - 1e-12
+    dual_t = jnp.where(
+        t_at_lo & t_at_hi,
+        0.0,
+        jnp.where(
+            t_at_lo,
+            jnp.maximum(-s_t, 0.0),
+            jnp.where(t_at_hi, jnp.maximum(s_t, 0.0), jnp.abs(s_t)),
+        ),
+    )
+    dual = jnp.maximum(jnp.max(dual_x), dual_t)
+    d_scale = (
+        1.0
+        + jnp.max(jnp.abs(prob.w * (x - prob.target) + prob.c))
+        + jnp.max(jnp.abs(gx))
+    )
+
+    # complementarity: y+ pairs with hi slack, y- with lo slack.  Slack is
+    # clamped to the primal scale so rows with effectively-unbounded caps
+    # (slack >> |Kx|) don't demand y == 0 to machine precision.
+    def _comp(y, kx, lo, hi):
+        if y.shape[0] == 0:
+            return jnp.asarray(0.0, x.dtype)
+        slack_cap = 1.0 + jnp.abs(kx)
+        hi_slack = jnp.where(
+            jnp.isfinite(hi), jnp.minimum(jnp.maximum(hi - kx, 0.0), slack_cap), 0.0
+        )
+        lo_slack = jnp.where(
+            jnp.isfinite(lo), jnp.minimum(jnp.maximum(kx - lo, 0.0), slack_cap), 0.0
+        )
+        c = jnp.maximum(y, 0.0) * hi_slack + jnp.maximum(-y, 0.0) * lo_slack
+        return jnp.max(c)
+
+    comp = jnp.maximum(
+        jnp.maximum(
+            _comp(yt, kx_tree, jnp.full_like(prob.tree_hi, -inf), prob.tree_hi),
+            _comp(ys, kx_sla, prob.sla_lo, prob.sla_hi),
+        ),
+        _comp(yi, kx_imp, prob.imp_lo, jnp.full_like(prob.imp_lo, inf)),
+    )
+    c_scale = p_scale * (1.0 + jnp.maximum(jnp.max(jnp.abs(yt)), jnp.max(jnp.abs(yi))))
+    return primal / p_scale, dual / d_scale, comp / c_scale
+
+
+def primal_residual(x, t, prob: StepProblem, tree: TreeTopo, sla: SlaTopo):
+    """Relative primal (feasibility) residual alone, same scaling as
+    :func:`kkt_residuals` — the certificate test for a polished iterate."""
+    kx_tree = tree_matvec(x, tree)
+    kx_sla = sla_matvec(x, sla)
+    kx_imp = x - t
+    inf = jnp.asarray(jnp.inf, x.dtype)
+
+    def _viol(kx, lo, hi):
+        return jnp.maximum(jnp.maximum(kx - hi, lo - kx), 0.0)
+
+    def pmax(v):
+        return jnp.max(v) if v.shape[0] else jnp.asarray(0.0, x.dtype)
+
+    primal = jnp.maximum(
+        jnp.maximum(
+            pmax(_viol(kx_tree, -inf, prob.tree_hi)),
+            pmax(_viol(kx_sla, prob.sla_lo, prob.sla_hi))
+            if sla.k
+            else jnp.asarray(0.0, x.dtype),
+        ),
+        pmax(_viol(kx_imp, prob.imp_lo, inf)),
+    )
+    p_scale = 1.0 + jnp.maximum(jnp.max(jnp.abs(kx_tree)), jnp.max(jnp.abs(kx_imp)))
+    return primal / p_scale
+
+
+def polish_t(x, t, prob: StepProblem):
+    """Exact epigraph polish: the largest feasible ``t`` given ``x``.
+
+    ``t`` appears only in the improvement rows ``x_i - t >= imp_lo_i`` and
+    its own box, so given the primal the optimum of the max-min objective
+    (``c_t < 0``) over ``t`` alone is closed-form.  Returns ``t`` unchanged
+    when ``t`` is pinned (QP phases) or no improvement row is live.
+    """
+    fin = jnp.isfinite(prob.imp_lo)
+    any_fin = jnp.any(fin)
+    inf = jnp.asarray(jnp.inf, x.dtype)
+    t_max = jnp.min(jnp.where(fin, x - prob.imp_lo, inf))
+    t_new = jnp.clip(t_max, prob.t_lo, prob.t_hi)
+    movable = (prob.t_hi - prob.t_lo > 0) & any_fin & (prob.c_t < 0)
+    return jnp.where(movable, t_new, t)

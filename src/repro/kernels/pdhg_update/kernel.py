@@ -1,12 +1,18 @@
-"""Fused PDHG update — Pallas TPU kernel.
+"""Fused PDHG update — Pallas TPU kernel (preconditioned form).
 
 The solver's hot loop applies ~15 elementwise ops over the primal state per
 iteration (prox, extrapolation) and ~8 over each dual block.  Unfused, each
 op is an HBM round-trip at fleet scale (n = 1e5-1e6 devices); fused, the
 whole update streams x once HBM->VMEM->HBM.  Blocked over n with a VMEM
 BlockSpec so arbitrarily large fleets tile cleanly; block size 8*128*8 keeps
-eight f32 operand tiles + two outputs under ~0.4 MB VMEM, lane-aligned
-(128) and sublane-aligned (8) for the VPU.
+the f32 operand tiles + outputs under ~0.5 MB VMEM, lane-aligned (128) and
+sublane-aligned (8) for the VPU.
+
+The solver-core overhaul made the step sizes *diagonal* (per-variable
+``tau``, per-row ``sigma`` — Pock-Chambolle preconditioning computed from
+the tree/SLA incidence), so the kernels take step-size VECTORS streamed
+through the same block pipeline as the state; the uniform-step fallback
+passes broadcast scalars.
 
 Validated in interpret mode against ``ref.py`` (CPU has no Pallas TPU
 lowering); on real TPU hardware drop ``interpret=True``.
@@ -28,7 +34,7 @@ BLOCK = 8 * 128 * 8  # 8192 elements: VPU lane/sublane aligned
 def _primal_kernel(x_ref, gx_ref, c_ref, w_ref, t_ref, lo_ref, hi_ref,
                    tau_ref, x1_ref, xe_ref):
     x = x_ref[...]
-    tau = tau_ref[0]
+    tau = tau_ref[...]
     w = w_ref[...]
     num = x - tau * (gx_ref[...] + c_ref[...]) + tau * w * t_ref[...]
     x1 = jnp.clip(num / (1.0 + tau * w), lo_ref[...], hi_ref[...])
@@ -37,13 +43,19 @@ def _primal_kernel(x_ref, gx_ref, c_ref, w_ref, t_ref, lo_ref, hi_ref,
 
 
 def _dual_kernel(y_ref, a_ref, sig_ref, lo_ref, hi_ref, out_ref):
-    sigma = sig_ref[0]
+    sigma = sig_ref[...]
     z = y_ref[...] + sigma * a_ref[...]
     out_ref[...] = z - sigma * jnp.clip(z / sigma, lo_ref[...], hi_ref[...])
 
 
-def _pad(v, n_pad):
-    return jnp.pad(v, (0, n_pad - v.shape[0]))
+def _pad(v, n_pad, value=0.0):
+    return jnp.pad(v, (0, n_pad - v.shape[0]), constant_values=value)
+
+
+def _as_vec(v, n, dtype):
+    """Broadcast a scalar step size to the vector form the kernel streams."""
+    v = jnp.asarray(v, dtype)
+    return jnp.broadcast_to(v, (n,)) if v.ndim == 0 else v
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block"))
@@ -52,19 +64,21 @@ def primal_update(x, gx, c, w, target, lo, hi, tau, *, interpret=True,
     n = x.shape[0]
     np_ = pl.cdiv(n, block) * block
     args = [_pad(v, np_) for v in (x, gx, c, w, target, lo, hi)]
-    tau = jnp.asarray([tau], x.dtype)
+    # pad with 1.0: the padded lanes have x = lo = hi = 0, so any positive
+    # step keeps them inert
+    args.append(_pad(_as_vec(tau, n, x.dtype), np_, value=1.0))
     spec = pl.BlockSpec((block,), lambda i: (i,))
     x1, xe = pl.pallas_call(
         _primal_kernel,
         grid=(np_ // block,),
-        in_specs=[spec] * 7 + [pl.BlockSpec(memory_space=pl.ANY)],
+        in_specs=[spec] * 8,
         out_specs=(spec, spec),
         out_shape=(
             jax.ShapeDtypeStruct((np_,), x.dtype),
             jax.ShapeDtypeStruct((np_,), x.dtype),
         ),
         interpret=interpret,
-    )(*args, tau)
+    )(*args)
     return x1[:n], xe[:n]
 
 
@@ -76,15 +90,15 @@ def dual_prox(y, a, sigma, lo, hi, *, interpret=True, block=BLOCK):
     args = [
         _pad(y, np_),
         _pad(a, np_),
-        jnp.asarray([sigma], y.dtype),
-        jnp.pad(lo, (0, np_ - n), constant_values=-big),
-        jnp.pad(hi, (0, np_ - n), constant_values=big),
+        _pad(_as_vec(sigma, n, y.dtype), np_, value=1.0),
+        _pad(lo, np_, value=-big),
+        _pad(hi, np_, value=big),
     ]
     spec = pl.BlockSpec((block,), lambda i: (i,))
     out = pl.pallas_call(
         _dual_kernel,
         grid=(np_ // block,),
-        in_specs=[spec, spec, pl.BlockSpec(memory_space=pl.ANY), spec, spec],
+        in_specs=[spec] * 5,
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct((np_,), y.dtype),
         interpret=interpret,

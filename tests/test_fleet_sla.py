@@ -31,10 +31,17 @@ from repro.fleet import orchestrator as orch_mod
 from repro.pdn.hierarchy_gen import homogeneous_fleet
 from repro.pdn.tenants import TenantLayout, assign_cross_domain_tenants
 
-# Phase II's max-min LP reaches its vertex long before PDHG can certify
-# KKT on the eps-degenerate SLA programs (known issue, see CHANGES PR 2);
-# cap the iterations so tests measure allocations, not certification.
-OPTS = NvpaxOptions(solver=SolverOptions(max_iters=2000))
+# Pre-overhaul these ran with a 2k-iteration cap: the max-min LP reached
+# its vertex long before PDHG could certify KKT on the eps-degenerate SLA
+# programs, and the <=1e-6 parity below held only because BOTH solves
+# truncated at the same repair-snapped vertex.  The solver-core overhaul
+# (repro.core.solver: adaptive restarts + preconditioning) certifies these
+# programs, so the tests now run to certification at tight tolerance —
+# binding rows land machine-exact on the vertex and parity holds by
+# convergence, not by the truncation artifact.
+OPTS = NvpaxOptions(
+    solver=SolverOptions(eps_abs=1e-11, eps_rel=1e-11, max_iters=20_000)
+)
 
 
 def _layout(pdn, lo_frac=0.35, hi_frac=0.55):

@@ -27,7 +27,10 @@ from repro.pdn.tree import build_from_level_sizes
 
 @pytest.mark.parametrize("n", [7, 128, 8192, 20000])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
-def test_primal_update_sweep(n, dtype):
+@pytest.mark.parametrize("vector_tau", [False, True])
+def test_primal_update_sweep(n, dtype, vector_tau):
+    """Scalar steps (uniform fallback) and per-variable step vectors (the
+    preconditioned form the solver core streams) both match the oracle."""
     with enable_x64(dtype == jnp.float64):
         rng = np.random.default_rng(n)
 
@@ -38,7 +41,7 @@ def test_primal_update_sweep(n, dtype):
         target = mk()
         lo = mk() - 2.0
         hi = lo + jnp.abs(mk()) + 0.1
-        tau = dtype(0.37)
+        tau = jnp.abs(mk()) + dtype(0.05) if vector_tau else dtype(0.37)
         x1, xe = primal_update(x, gx, c, w, target, lo, hi, tau)
         rx1, rxe = primal_update_ref(x, gx, c, w, target, lo, hi, tau)
         np.testing.assert_allclose(np.asarray(x1), np.asarray(rx1), rtol=1e-6, atol=1e-6)
@@ -47,7 +50,8 @@ def test_primal_update_sweep(n, dtype):
 
 @pytest.mark.parametrize("n", [5, 1024, 9000])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
-def test_dual_prox_sweep(n, dtype):
+@pytest.mark.parametrize("vector_sigma", [False, True])
+def test_dual_prox_sweep(n, dtype, vector_sigma):
     with enable_x64(dtype == jnp.float64):
         rng = np.random.default_rng(n + 1)
 
@@ -57,7 +61,7 @@ def test_dual_prox_sweep(n, dtype):
         y, a = mk(), mk()
         lo = jnp.where(mk() > 0, -jnp.inf, mk())
         hi = jnp.where(mk() > 0, jnp.inf, lo + 1.0)
-        sigma = dtype(0.21)
+        sigma = jnp.abs(mk()) + dtype(0.05) if vector_sigma else dtype(0.21)
         out = dual_prox(y, a, sigma, lo, hi)
         ref = dual_prox_ref(y, a, sigma, lo, hi)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6, atol=1e-6)
