@@ -7,7 +7,7 @@ Replaces the former copy-pasted inline schema checks in
 ``.github/workflows/ci.yml`` with one gate that
 
 1. validates the schema of every ``BENCH_*.json`` artifact the suite
-   emits (``BENCH_engine.json`` and ``BENCH_fleet.json`` are required,
+   emits (engine, fleet, solver and scaling artifacts are required,
    ``BENCH_sla_priorities.json`` is checked when present);
 2. asserts every recorded ``meets_*`` acceptance flag is still true
    (parity, brownout coordination, zero-recompile churn, cross-domain
@@ -28,7 +28,12 @@ import json
 import os
 import sys
 
-REQUIRED = ("BENCH_engine.json", "BENCH_fleet.json", "BENCH_solver.json")
+REQUIRED = (
+    "BENCH_engine.json",
+    "BENCH_fleet.json",
+    "BENCH_solver.json",
+    "BENCH_scaling.json",
+)
 OPTIONAL = ("BENCH_sla_priorities.json",)
 
 ENGINE_ROW_KEYS = (
@@ -74,9 +79,7 @@ def check_engine(d: dict, errors: list[str], gated: dict[str, float]) -> None:
             )
         if len(row.get("phase_iterations_mean", ())) != 3:
             _fail(errors, "BENCH_engine.json: phase_iterations_mean != 3 phases")
-        gated[f"engine_speedup.n{row['n_devices']}"] = float(
-            row["engine_speedup"]
-        )
+        gated[f"engine_speedup.n{row['n_devices']}"] = float(row["engine_speedup"])
 
 
 def check_fleet(d: dict, errors: list[str], gated: dict[str, float]) -> None:
@@ -120,6 +123,61 @@ def check_solver(d: dict, errors: list[str], gated: dict[str, float]) -> None:
     gated["solver.cert_margin"] = (budget - float(d["max_iterations"])) / budget
 
 
+SCALING_ROW_KEYS = (
+    "n",
+    "n_domains",
+    "mesh_devices",
+    "stacked_ms_mean",
+    "sharded_ms_mean",
+    "sharded_speedup",
+    "sharded_parity_W",
+    "vs_paper_interval",
+)
+
+
+def check_scaling(d: dict, errors: list[str], gated: dict[str, float]) -> None:
+    """Sharded-dispatch scaling artifact (ISSUE 6): every dispatch row must
+    hold sharded-vs-stacked allocation parity to <= 1e-6 W, the recorded
+    acceptance flags must be true, and the per-size sharded speedups, the
+    fitted single-solve exponent headroom and the batched throughput ratio
+    are gated against regression."""
+    for key in ("dispatch", "single_solve", "batched"):
+        if key not in d:
+            _fail(errors, f"BENCH_scaling.json: missing section {key!r}")
+            return
+    rows = d["dispatch"].get("rows")
+    if not rows:
+        _fail(errors, "BENCH_scaling.json: no dispatch rows")
+        return
+    for row in rows:
+        for key in SCALING_ROW_KEYS:
+            if key not in row:
+                _fail(errors, f"BENCH_scaling.json: dispatch row missing {key!r}")
+                return
+        if row["sharded_parity_W"] > 1e-6:
+            _fail(
+                errors,
+                "BENCH_scaling.json: sharded/stacked parity "
+                f"{row['sharded_parity_W']} W > 1e-6 at n={row['n']}",
+            )
+        gated[f"scaling.sharded_speedup.n{row['n']}"] = float(row["sharded_speedup"])
+    for flag in sorted(k for k in d["dispatch"] if k.startswith("meets_")):
+        if not d["dispatch"][flag]:
+            _fail(errors, f"BENCH_scaling.json: acceptance flag {flag} is false")
+    # gate "bigger is better" headroom below a generous exponent ceiling so
+    # a super-linear blowup in the single-solve curve fails loudly
+    gated["scaling.exponent_headroom"] = 1.5 - float(
+        d["single_solve"]["fitted_exponent"]
+    )
+    # best-K throughput over the K=1 baseline: "batching pays off at some
+    # K", independent of how far the profile's K range extends
+    brows = d["batched"]["rows"]
+    gated["scaling.batched_throughput_ratio"] = float(
+        max(r["solves_per_s"] for r in brows)
+        / max(brows[0]["solves_per_s"], 1e-12)
+    )
+
+
 def check_sla_priorities(d: dict, errors: list[str], gated: dict[str, float]) -> None:
     for key in ("S_global_mean", "sla_margin_mean", "violations"):
         if key not in d:
@@ -144,6 +202,10 @@ MARGINS = {
     # fraction of the certification budget left unused on the degenerate
     # suite; 0.5 margin tolerates run-to-run restart-path variance
     "solver.cert_margin": 0.5,
+    # wall-clock ratios on shared CI runners are noisy; lock in only half
+    "scaling.sharded_speedup": 0.5,
+    "scaling.exponent_headroom": 0.5,
+    "scaling.batched_throughput_ratio": 0.5,
 }
 
 
@@ -162,7 +224,8 @@ def main() -> int:
         default=os.path.join(os.path.dirname(__file__), "bench_floors.json"),
     )
     ap.add_argument(
-        "--update-floors", action="store_true",
+        "--update-floors",
+        action="store_true",
         help="ratchet floors up from the current run (never down)",
     )
     args = ap.parse_args()
@@ -173,6 +236,7 @@ def main() -> int:
         "BENCH_engine.json": check_engine,
         "BENCH_fleet.json": check_fleet,
         "BENCH_solver.json": check_solver,
+        "BENCH_scaling.json": check_scaling,
         "BENCH_sla_priorities.json": check_sla_priorities,
     }
     for name in REQUIRED + OPTIONAL:

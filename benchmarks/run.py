@@ -59,14 +59,13 @@ def main() -> None:
                 stride=24 if args.full else 96,
             ),
         ),
+        # Fig 3 single-solve curve + batched throughput + the sharded vs
+        # stacked vs loop dispatch curve, emitted under the BENCH_ prefix so
+        # check_bench gates it (schema, parity <= 1e-6 W, regression floors);
+        # also standalone: scaling.py --smoke under forced host devices
         (
-            "scaling_fig3",
-            lambda: scaling.run(
-                sizes=(1_000, 5_000, 10_000, 25_000, 50_000, 100_000)
-                if args.full
-                else (1_000, 5_000, 10_000, 25_000),
-                repeats=5 if args.full else 2,
-            ),
+            "BENCH_scaling",
+            lambda: scaling.run_bench("full" if args.full else "default"),
         ),
         # Appendix B tenant-SLA run, emitted under the BENCH_ prefix so the
         # check_bench gate consumes it alongside BENCH_engine/BENCH_fleet
@@ -134,8 +133,15 @@ def main() -> None:
                 f"(paper 98.92/81.30/98.92); wall {r['wall_ms_mean']:.0f}ms "
                 f"(paper 264.69)"
             ),
-            "scaling_fig3": lambda r: (
-                f"runtime ~ n^{r['fitted_exponent']:.2f} (paper n^1.16)"
+            "BENCH_scaling": lambda r: (
+                f"runtime ~ n^{r['single_solve']['fitted_exponent']:.2f} "
+                f"(paper n^1.16) | "
+                + " | ".join(
+                    f"n={row['n']}: sharded {row['sharded_ms_mean']:.0f}ms "
+                    f"(x{row['sharded_speedup']:.2f} vs stacked, "
+                    f"parity {row['sharded_parity_W']:.0e} W)"
+                    for row in r["dispatch"]["rows"]
+                )
             ),
             "BENCH_sla_priorities": lambda r: (
                 f"S={r['S_global_mean']:.2f}% margins "

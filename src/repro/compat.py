@@ -8,6 +8,12 @@ are funneled through this module so call sites stay stable.
   also accept per-context configuration via ``jax.config``; the shim always
   returns a context manager with the historical semantics
   (``enable_x64(flag)`` enables/disables 64-bit types inside the block).
+* ``shard_map``: graduated from ``jax.experimental.shard_map`` to
+  ``jax.shard_map``, and its replication-check keyword was renamed
+  (``check_rep`` -> ``check_vma``).  The shim resolves the callable and
+  always disables the replication checker — the fleet dispatch returns
+  replicated coordinator outputs computed from collectives, which the
+  static checker cannot always verify.
 """
 
 from __future__ import annotations
@@ -16,7 +22,7 @@ import contextlib
 
 import jax
 
-__all__ = ["enable_x64"]
+__all__ = ["enable_x64", "shard_map"]
 
 
 def enable_x64(enabled: bool = True):
@@ -41,3 +47,15 @@ def enable_x64(enabled: bool = True):
             jax.config.update("jax_enable_x64", prev)
 
     return _shim()
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """Resolve ``shard_map`` across its experimental -> stable migration,
+    with the replication checker off (see module docstring)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm  # noqa: N813
+    try:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
+    except TypeError:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)

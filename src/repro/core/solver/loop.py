@@ -22,7 +22,14 @@ from repro.core.problem import StepProblem
 from repro.core.solver import restarts as restarts_mod
 from repro.core.solver import scaling, termination
 from repro.core.solver.options import SolveStats, SolverOptions, SolverState
-from repro.core.treeops import SlaTopo, TreeTopo, sla_matvec, tree_matvec
+from repro.core.treeops import (
+    SlaTopo,
+    TreeTopo,
+    sla_matvec,
+    sla_rmatvec,
+    tree_matvec,
+    tree_rmatvec,
+)
 
 __all__ = ["solve"]
 
@@ -84,7 +91,7 @@ def solve(
     neg_inf_tree = jnp.full((m,), -inf, dtype)
     pos_inf_imp = jnp.full((n,), inf, dtype)
 
-    if opts.use_pallas:
+    if opts.use_pallas or opts.use_pallas_stats or opts.use_pallas_tree:
         from repro.kernels.pdhg_update import ops as _pk
 
         interpret = (
@@ -92,15 +99,47 @@ def solve(
             if opts.pallas_interpret is None
             else opts.pallas_interpret
         )
+    else:
+        interpret = True
+
+    # per-dual-block primal weights (PDLP multi-block style): the SLA rows
+    # get their own omega, and tau_x is recomputed per iteration from the
+    # omega-weighted per-block column sums (the pc_step_sizes column sum,
+    # split by row block) so the Pock-Chambolle bound holds for any pair of
+    # weights.  Needs the diagonal (preconditioned) steps and an SLA block.
+    use_blockwise = bool(opts.blockwise_omega and opts.precondition and k > 0)
+    if use_blockwise:
+        sm_bw = sc.s * sc.mov
+        act_bw = jnp.isfinite(prob.imp_lo).astype(dtype)
+        col_sla_bw = sm_bw * sla_rmatvec(sc.d_sla, sla, n)
+        col_rest_bw = sm_bw * (tree_rmatvec(sc.d_tree, tree, n) + sc.d_imp * act_bw)
+        tiny_bw = jnp.asarray(1e-12, dtype)
+        theta_bw = jnp.asarray(opts.theta, dtype)
 
     def pdhg_iter(carry, _):
-        x, t, y_tree, y_sla, y_imp, omega = carry
-        tau_x = omega * steps.tau_x
+        x, t, y_tree, y_sla, y_imp, omega, om_sla = carry
+        if use_blockwise:
+            tau_x = theta_bw / jnp.maximum(
+                col_rest_bw / omega + col_sla_bw / om_sla, tiny_bw
+            )
+            sig_sla = steps.sig_sla / om_sla
+        else:
+            tau_x = omega * steps.tau_x
+            sig_sla = steps.sig_sla / omega
         tau_t = omega * steps.tau_t
         sig_tree = steps.sig_tree / omega
-        sig_sla = steps.sig_sla / omega
         sig_imp = steps.sig_imp / omega
-        gx, gt = scaling.scaled_rmatvec(y_tree, y_sla, y_imp, tree, sla, sc, n)
+        gx, gt = scaling.scaled_rmatvec(
+            y_tree,
+            y_sla,
+            y_imp,
+            tree,
+            sla,
+            sc,
+            n,
+            use_kernels=opts.use_pallas_tree,
+            interpret=interpret,
+        )
         if opts.use_pallas:
             # fused primal prox + extrapolation, one HBM round-trip
             x1, xe = _pk.primal_update(
@@ -118,7 +157,15 @@ def solve(
         t1 = jnp.clip(t - tau_t * (gt + ct_s), tlo_s, thi_s)
         # dual with extrapolation
         te = 2.0 * t1 - t
-        a_tree, a_sla, a_imp = scaling.scaled_matvec(xe, te, tree, sla, sc)
+        a_tree, a_sla, a_imp = scaling.scaled_matvec(
+            xe,
+            te,
+            tree,
+            sla,
+            sc,
+            use_kernels=opts.use_pallas_tree,
+            interpret=interpret,
+        )
         if opts.use_pallas:
             y_tree1 = _pk.dual_prox(
                 y_tree, a_tree, sig_tree, neg_inf_tree, tree_hi_s, interpret=interpret
@@ -130,19 +177,17 @@ def solve(
             y_tree1 = _dual_prox(
                 y_tree + sig_tree * a_tree, sig_tree, neg_inf_tree, tree_hi_s
             )
-            y_imp1 = _dual_prox(
-                y_imp + sig_imp * a_imp, sig_imp, imp_lo_s, pos_inf_imp
-            )
+            y_imp1 = _dual_prox(y_imp + sig_imp * a_imp, sig_imp, imp_lo_s, pos_inf_imp)
         y_sla1 = (
             _dual_prox(y_sla + sig_sla * a_sla, sig_sla, sla_lo_s, sla_hi_s)
             if k
             else y_sla
         )
-        return (x1, t1, y_tree1, y_sla1, y_imp1, omega), None
+        return (x1, t1, y_tree1, y_sla1, y_imp1, omega, om_sla), None
 
-    def run_chunk(state6):
+    def run_chunk(state7):
         """opts.check_every PDHG iterations."""
-        out, _ = lax.scan(pdhg_iter, state6, None, length=opts.check_every)
+        out, _ = lax.scan(pdhg_iter, state7, None, length=opts.check_every)
         return out
 
     def unscale(x, t, yt, ys, yi):
@@ -170,6 +215,7 @@ def solve(
         y_sla: jnp.ndarray
         y_imp: jnp.ndarray
         omega: jnp.ndarray
+        omega_sla: jnp.ndarray  # SLA-block primal weight (blockwise_omega)
         # averaging since last restart
         ax: jnp.ndarray
         at: jnp.ndarray
@@ -180,6 +226,7 @@ def solve(
         # restart anchors (for primal-weight travel ratio)
         rx: jnp.ndarray
         ry_tree: jnp.ndarray
+        ry_sla: jnp.ndarray
         ry_imp: jnp.ndarray
         # previous check's iterate (no-progress detection)
         px: jnp.ndarray
@@ -216,6 +263,7 @@ def solve(
         y_sla=ys0,
         y_imp=yi0,
         omega=init_omega,
+        omega_sla=init_omega,
         ax=jnp.zeros_like(x0),
         at=jnp.zeros_like(t0),
         ayt=jnp.zeros_like(yt0),
@@ -224,6 +272,7 @@ def solve(
         acount=jnp.zeros((), dtype),
         rx=x0,
         ry_tree=yt0,
+        ry_sla=ys0,
         ry_imp=yi0,
         px=x0,
         pt=t0,
@@ -245,12 +294,27 @@ def solve(
         return (~c.done) & (c.chunk < n_chunks)
 
     def body(c: Carry):
-        x, t, yt, ys, yi, om = run_chunk(
-            (c.x, c.t, c.y_tree, c.y_sla, c.y_imp, c.omega)
+        x, t, yt, ys, yi, om, om_sla = run_chunk(
+            (c.x, c.t, c.y_tree, c.y_sla, c.y_imp, c.omega, c.omega_sla)
         )
         cnt = c.acount + 1.0
-        ax, at_ = c.ax + x, c.at + t
-        ayt, ays, ayi = c.ayt + yt, c.ays + ys, c.ayi + yi
+        if opts.use_pallas_stats:
+            # fused chunk-boundary bookkeeping: average accumulation + move
+            # norms + restart-candidate travel, one streaming pass per block
+            ax, move_num, move_den, dx2_cur, dx2_avg = _pk.primal_chunk_stats(
+                x, c.px, c.rx, c.ax, cnt, interpret=interpret
+            )
+            ayt, dyt2_cur, dyt2_avg, dyt2_zero = _pk.dual_chunk_stats(
+                yt, c.ry_tree, c.ayt, cnt, interpret=interpret
+            )
+            ayi, dyi2_cur, dyi2_avg, dyi2_zero = _pk.dual_chunk_stats(
+                yi, c.ry_imp, c.ayi, cnt, interpret=interpret
+            )
+            at_ = c.at + t
+            ays = c.ays + ys
+        else:
+            ax, at_ = c.ax + x, c.at + t
+            ayt, ays, ayi = c.ayt + yt, c.ays + ys, c.ayi + yi
 
         # KKT of three restart candidates: the current iterate, the running
         # average, and the current primal with ZERO duals.  The zero-dual
@@ -259,9 +323,7 @@ def solve(
         # the complementarity residual of the carried state is catastrophic
         # while dropping the duals costs only a cold dual transient — the
         # candidate wins the comparison exactly when that trade is right.
-        p, d, cm = termination.kkt_residuals(
-            unscale(x, t, yt, ys, yi), prob, tree, sla
-        )
+        p, d, cm = termination.kkt_residuals(unscale(x, t, yt, ys, yi), prob, tree, sla)
         score = jnp.maximum(jnp.maximum(p, d), cm)
         xa, ta = ax / cnt, at_ / cnt
         yta, ysa, yia = ayt / cnt, ays / cnt, ayi / cnt
@@ -270,9 +332,7 @@ def solve(
         )
         score_a = jnp.maximum(jnp.maximum(pa, da), ca)
         pz, dz, cz = termination.kkt_residuals(
-            unscale(
-                x, t, jnp.zeros_like(yt), jnp.zeros_like(ys), jnp.zeros_like(yi)
-            ),
+            unscale(x, t, jnp.zeros_like(yt), jnp.zeros_like(ys), jnp.zeros_like(yi)),
             prob,
             tree,
             sla,
@@ -303,10 +363,16 @@ def solve(
         # exact optimum.  A frozen QP iterate has no such optimality
         # evidence, so QP solves (Phase I) never exit this way.
         if use_cert:
-            move = jnp.maximum(
-                jnp.max(jnp.abs(x - c.px)) / (1.0 + jnp.max(jnp.abs(x))),
-                jnp.abs(t - c.pt) / (1.0 + jnp.abs(t)),
-            )
+            if opts.use_pallas_stats:
+                move = jnp.maximum(
+                    move_num / (1.0 + move_den),
+                    jnp.abs(t - c.pt) / (1.0 + jnp.abs(t)),
+                )
+            else:
+                move = jnp.maximum(
+                    jnp.max(jnp.abs(x - c.px)) / (1.0 + jnp.max(jnp.abs(x))),
+                    jnp.abs(t - c.pt) / (1.0 + jnp.abs(t)),
+                )
             frozen = jnp.where(
                 move < opts.noprogress_tol, c.frozen + 1, jnp.zeros((), jnp.int32)
             )
@@ -364,13 +430,34 @@ def solve(
 
         # primal-weight re-estimate: travel ratio since the anchor, or
         # residual balance when the stall detector fired
-        dx = jnp.sqrt(jnp.sum((xn - c.rx) ** 2))
-        dy = jnp.sqrt(jnp.sum((ytn - c.ry_tree) ** 2) + jnp.sum((yin - c.ry_imp) ** 2))
-        om_new = jnp.where(
-            do_restart,
-            restarts_mod.update_omega(om, dx, dy, pn, dn, cn, stalled),
-            om,
-        )
+        if opts.use_pallas_stats:
+            # select the fused travel partial matching the adopted candidate
+            # (the vertex exit keeps the raw iterate, but a vertex exit is
+            # `done`, which suppresses the restart that would consume dx/dy)
+            dx = jnp.sqrt(pick(dx2_cur, dx2_avg, dx2_cur))
+            dy = jnp.sqrt(
+                pick(dyt2_cur, dyt2_avg, dyt2_zero)
+                + pick(dyi2_cur, dyi2_avg, dyi2_zero)
+            )
+        else:
+            dx = jnp.sqrt(jnp.sum((xn - c.rx) ** 2))
+            dy = jnp.sqrt(
+                jnp.sum((ytn - c.ry_tree) ** 2) + jnp.sum((yin - c.ry_imp) ** 2)
+            )
+        if use_blockwise:
+            dy_sla = jnp.sqrt(jnp.sum((ysn - c.ry_sla) ** 2))
+            om_up, om_sla_up = restarts_mod.update_omega_blocks(
+                om, om_sla, dx, dy, dy_sla, pn, dn, cn, stalled
+            )
+            om_new = jnp.where(do_restart, om_up, om)
+            om_sla_new = jnp.where(do_restart, om_sla_up, om_sla)
+        else:
+            om_new = jnp.where(
+                do_restart,
+                restarts_mod.update_omega(om, dx, dy, pn, dn, cn, stalled),
+                om,
+            )
+            om_sla_new = om_sla
 
         # on restart (or exit) adopt the candidate; otherwise keep iterating
         # from the raw iterate
@@ -391,6 +478,7 @@ def solve(
             y_sla=ys_out,
             y_imp=yi_out,
             omega=om_new,
+            omega_sla=om_sla_new,
             ax=zf(ax),
             at=zf(at_),
             ayt=zf(ayt),
@@ -399,6 +487,7 @@ def solve(
             acount=jnp.where(do_restart, 0.0, cnt),
             rx=jnp.where(do_restart, x_out, c.rx),
             ry_tree=jnp.where(do_restart, yt_out, c.ry_tree),
+            ry_sla=jnp.where(do_restart, ys_out, c.ry_sla),
             ry_imp=jnp.where(do_restart, yi_out, c.ry_imp),
             px=x,
             pt=t,
@@ -412,9 +501,7 @@ def solve(
             score_restart=jnp.where(
                 do_restart,
                 score_cand,
-                jnp.where(
-                    jnp.isfinite(c.score_restart), c.score_restart, score_cand
-                ),
+                jnp.where(jnp.isfinite(c.score_restart), c.score_restart, score_cand),
             ),
             chunks_since=jnp.where(do_restart, 0, chunks_since),
             stall=stall,

@@ -61,6 +61,24 @@ class SolverOptions(NamedTuple):
     # max-min LP's scalar converges an order slower than x on degenerate
     # geometries, so the certificate exit recovers t* from the settled x.
     polish_t: bool = True
+    # -- sharded-dispatch / Pallas-native knobs (PR 6) ---------------------
+    # Route the tree prefix / SLA segment matvecs of the inner iteration
+    # through the chunked Pallas kernels (repro.kernels.tree_matvec) instead
+    # of the plain jnp cumsum/segment_sum in repro.core.treeops.
+    use_pallas_tree: bool = False
+    # Fuse the between-chunk restart/KKT bookkeeping (average accumulation,
+    # no-progress move norms, restart-candidate travel distances) into
+    # single-pass kernel epilogues (repro.kernels.pdhg_update chunk stats)
+    # instead of separate jnp reductions.  Reduction *association* differs
+    # from jnp (per-block partials), so iterate trajectories may diverge at
+    # roundoff; allocations agree to solver tolerance.
+    use_pallas_stats: bool = False
+    # Per-dual-block primal weights (PDLP multi-block style): a second
+    # omega for the SLA rows, re-estimated from SLA dual travel at each
+    # restart, with tau_x recomputed from the omega-weighted per-block
+    # column sums so the Pock-Chambolle bound still holds by construction.
+    # Requires precondition=True (silently inert otherwise / without SLAs).
+    blockwise_omega: bool = False
 
 
 class SolverState(NamedTuple):

@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["restart_decision", "update_omega"]
+__all__ = ["restart_decision", "update_omega", "update_omega_blocks"]
 
 
 def restart_decision(
@@ -121,3 +121,25 @@ def update_omega(omega, dx, dy, pres, dres, cres, stalled):
     )
     om_new = jnp.clip(om_new, omega / 4.0, omega * 4.0)
     return jnp.clip(om_new, 1e-5, 1e5)
+
+
+def update_omega_blocks(omega, omega_sla, dx, dy, dy_sla, pres, dres, cres, stalled):
+    """Per-dual-block primal weights (PDLP multi-block style).
+
+    The constraint rows split into two dual blocks with very different
+    geometry: the tree/improvement rows (whose duals travel with the fleet
+    state) and the SLA rows (a handful of tenant envelopes whose duals move
+    on the cadence of entitlement changes).  A single omega forces one step
+    ratio on both; here each block gets its own weight, re-estimated from
+    *its own* dual travel against the shared primal travel — the same
+    floored travel-ratio / residual-balance rule as :func:`update_omega`,
+    applied per block.  The loop recomputes ``tau_x`` from the
+    omega-weighted per-block column sums, so the Pock-Chambolle bound
+    ``tau_j * sum_b rowsum_i / omega_b <= theta^2`` holds for every pair of
+    weights by construction.
+
+    Returns ``(omega_new, omega_sla_new)``.
+    """
+    om = update_omega(omega, dx, dy, pres, dres, cres, stalled)
+    om_sla = update_omega(omega_sla, dx, dy_sla, pres, dres, cres, stalled)
+    return om, om_sla

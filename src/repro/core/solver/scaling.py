@@ -132,25 +132,56 @@ def make_scales(prob: StepProblem, tree: TreeTopo, sla: SlaTopo) -> Scales:
     return Scales(s, s_t, mov, t_mov, d_tree, d_sla, d_imp)
 
 
-def scaled_matvec(xs, ts, tree, sla, sc: Scales):
+def scaled_matvec(xs, ts, tree, sla, sc: Scales, *, use_kernels=False, interpret=True):
     """Scaled forward operator D2 K_mov S, split by row block.  Input is the
-    SCALED primal (x~, t~); pinned columns are zeroed (folded into bounds)."""
+    SCALED primal (x~, t~); pinned columns are zeroed (folded into bounds).
+
+    ``use_kernels`` routes the tree prefix / SLA segment reductions through
+    the chunked Pallas kernels (:mod:`repro.kernels.tree_matvec`) instead of
+    the plain jnp ops — the ``SolverOptions.use_pallas_tree`` path.
+    """
     x = sc.s * sc.mov * xs
+    if use_kernels:
+        from repro.kernels import tree_matvec as tk
+
+        kx = tk.tree_matvec(x, tree.start, tree.end, interpret=interpret)
+        sx = (
+            tk.sla_matvec(x, sla.dev, sla.ten, sla.k, interpret=interpret)
+            if sla.k
+            else sla_matvec(x, sla)
+        )
+    else:
+        kx = tree_matvec(x, tree)
+        sx = sla_matvec(x, sla)
     return (
-        sc.d_tree * tree_matvec(x, tree),
-        sc.d_sla * sla_matvec(x, sla),
+        sc.d_tree * kx,
+        sc.d_sla * sx,
         sc.d_imp * (x - sc.s_t * sc.t_mov * ts),
     )
 
 
-def scaled_rmatvec(y_tree, y_sla, y_imp, tree, sla, sc: Scales, n):
+def scaled_rmatvec(
+    y_tree, y_sla, y_imp, tree, sla, sc: Scales, n, *, use_kernels=False, interpret=True
+):
     """Scaled adjoint S K_mov^T D2 -> (grad on x~, grad on t~)."""
     yi = sc.d_imp * y_imp
-    gx = (
-        tree_rmatvec(sc.d_tree * y_tree, tree, n)
-        + sla_rmatvec(sc.d_sla * y_sla, sla, n)
-        + yi
-    )
+    if use_kernels:
+        from repro.kernels import tree_matvec as tk
+
+        gx = tk.tree_rmatvec(
+            sc.d_tree * y_tree, tree.start, tree.end, n, interpret=interpret
+        )
+        if sla.k:
+            gx = gx + tk.sla_rmatvec(
+                sc.d_sla * y_sla, sla.dev, sla.ten, n, interpret=interpret
+            )
+        gx = gx + yi
+    else:
+        gx = (
+            tree_rmatvec(sc.d_tree * y_tree, tree, n)
+            + sla_rmatvec(sc.d_sla * y_sla, sla, n)
+            + yi
+        )
     gt = -sc.s_t * sc.t_mov * jnp.sum(yi)
     return sc.s * sc.mov * gx, gt
 

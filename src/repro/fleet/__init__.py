@@ -10,6 +10,9 @@ engines coordinated by an inter-domain budget planner:
 * :mod:`repro.fleet.orchestrator` — per-domain engines served as one
   stacked/vmapped dispatch (homogeneous domains) or a compiled-engine
   loop, with per-domain warm carry;
+* :mod:`repro.fleet.sharded` — the stacked dispatch sharded over a
+  ``("domains",)`` device mesh with the coordinator waterfill as the only
+  cross-shard reduction (``mode="sharded"``);
 * :mod:`repro.fleet.lifecycle` — churn-tolerant re-pins (device
   join/leave, supply derating) and double-buffered telemetry ingestion.
 """

@@ -322,8 +322,9 @@ class BudgetCoordinator:
         grants = self._grants(demand, dmin + lift, dcap, ccap, dn)
         return grants, slice_lo, slice_hi
 
-    def check(self, grants: np.ndarray, coord_cap: np.ndarray | None = None,
-              tol: float = 1e-6) -> None:
+    def check(
+        self, grants: np.ndarray, coord_cap: np.ndarray | None = None, tol: float = 1e-6
+    ) -> None:
         """Assert grants respect every above-the-cut capacity row."""
         ccap = self.cap if coord_cap is None else np.asarray(coord_cap)
         csum = np.concatenate([[0.0], np.cumsum(grants)])

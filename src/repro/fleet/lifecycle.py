@@ -109,7 +109,10 @@ class FleetLifecycle:
                 l[i], u[i] = self._left[(k, i)]
             p = self.orch._local_pdn[k]
             check_caps_fund_minimums(
-                p.node_start, p.node_end, self.orch._node_cap[k], l,
+                p.node_start,
+                p.node_end,
+                self.orch._node_cap[k],
+                l,
                 what=f"rejoin into domain {k}: node",
             )
             restored[k] = (l, u)

@@ -106,14 +106,30 @@ class _DomainBatch(NamedTuple):
     sla_ten: jnp.ndarray  # [K, E] int32
 
 
-def _fleet_solve(dom, cap, sla_lo, sla_hi, r, active, warm, *, meta, opts):
-    """All K domain control steps as one traced program."""
-    global _N_TRACES
-    _N_TRACES += 1  # executes at trace time only
+def _solve_domains(dom, cap, sla_lo, sla_hi, r, active, warm, *, meta, opts):
+    """The vmapped per-domain three-phase solve over [K, ...] arrays.
+
+    Shared body of the stacked dispatch (:func:`_fleet_solve`) and the
+    sharded dispatch (:mod:`repro.fleet.sharded`, where K is the per-shard
+    domain count) so both modes trace the identical per-domain program.
+    """
 
     def one(
-        l, u, ws, pri, start, end, depth, sdev, sten,
-        cap_k, slo_k, shi_k, r_k, act_k, warm_k,
+        l,
+        u,
+        ws,
+        pri,
+        start,
+        end,
+        depth,
+        sdev,
+        sten,
+        cap_k,
+        slo_k,
+        shi_k,
+        r_k,
+        act_k,
+        warm_k,
     ):
         tree = TreeTopo(start=start, end=end, cap=cap_k, depth=depth)
         sla = SlaTopo(dev=sdev, ten=sten, lo=slo_k, hi=shi_k)
@@ -131,9 +147,30 @@ def _fleet_solve(dom, cap, sla_lo, sla_hi, r, active, warm, *, meta, opts):
 
     warm_axes = None if warm is None else 0
     return jax.vmap(one, in_axes=(0,) * 14 + (warm_axes,))(
-        dom.l, dom.u, dom.weight_scale, dom.priority,
-        dom.start, dom.end, dom.depth, dom.sla_dev, dom.sla_ten,
-        cap, sla_lo, sla_hi, r, active, warm,
+        dom.l,
+        dom.u,
+        dom.weight_scale,
+        dom.priority,
+        dom.start,
+        dom.end,
+        dom.depth,
+        dom.sla_dev,
+        dom.sla_ten,
+        cap,
+        sla_lo,
+        sla_hi,
+        r,
+        active,
+        warm,
+    )
+
+
+def _fleet_solve(dom, cap, sla_lo, sla_hi, r, active, warm, *, meta, opts):
+    """All K domain control steps as one traced program."""
+    global _N_TRACES
+    _N_TRACES += 1  # executes at trace time only
+    return _solve_domains(
+        dom, cap, sla_lo, sla_hi, r, active, warm, meta=meta, opts=opts
     )
 
 
@@ -210,9 +247,7 @@ class FleetOrchestrator:
         ]
         self._dev_l: list[np.ndarray] = [p.dev_l.copy() for p in self._local_pdn]
         self._dev_u: list[np.ndarray] = [p.dev_u.copy() for p in self._local_pdn]
-        self._node_cap: list[np.ndarray] = [
-            p.node_cap.copy() for p in self._local_pdn
-        ]
+        self._node_cap: list[np.ndarray] = [p.node_cap.copy() for p in self._local_pdn]
         self._domain_supply = np.ones(K)
         self._feed_scale = 1.0
         if mode == "auto":
@@ -223,9 +258,19 @@ class FleetOrchestrator:
                 and ms.max() <= pad_factor * ms.min()
             )
             mode = "stacked" if homogeneous else "loop"
-        if mode not in ("stacked", "loop"):
-            raise ValueError(f"mode must be auto/stacked/loop, got {mode!r}")
+        if mode not in ("stacked", "loop", "sharded"):
+            raise ValueError(f"mode must be auto/stacked/loop/sharded, got {mode!r}")
+        if mode == "sharded" and coordinator_mode not in ("waterfill", "subtree"):
+            raise ValueError(
+                "sharded dispatch supports waterfill/subtree coordinators, "
+                f"got {coordinator_mode!r}"
+            )
         self.mode = mode
+        self._mesh = None
+        if mode == "sharded":
+            from repro.fleet import sharded as _sharded
+
+            self._mesh = _sharded.build_mesh(K)
         self._engines: list[AllocEngine] | None = None
         self._warm: phases.WarmCarry | None = None
         self.history: list[dict[str, Any]] = []
@@ -233,7 +278,7 @@ class FleetOrchestrator:
             # fail fast: contracts must be deliverable and fundable under
             # the nameplate feeds before the first step
             self._check_effective_floors()
-        if mode == "stacked":
+        if mode in ("stacked", "sharded"):
             # pad to the largest domain; static metadata is the union over
             # domains so per-domain differences stay traced, never static
             self._N = int(max(p.n for p in self._local_pdn))
@@ -243,12 +288,8 @@ class FleetOrchestrator:
             self._E = self._sla.max_edges if self._sla is not None else 0
             self._T = self._sla.max_rows + 1 if self._sla is not None else 0
             self.meta = BatchMeta(
-                levels=tuple(
-                    sorted({int(p) for p in priority}, reverse=True)
-                ),
-                n_depths=int(
-                    max(p.node_depth.max() for p in self._local_pdn)
-                ) + 1,
+                levels=tuple(sorted({int(p) for p in priority}, reverse=True)),
+                n_depths=int(max(p.node_depth.max() for p in self._local_pdn)) + 1,
                 # tenant minimums can force pinned-free devices upward, so
                 # the pin-free simplification (paper 4.3.1) is SLA-free only
                 pin_free=self._sla is None,
@@ -339,12 +380,19 @@ class FleetOrchestrator:
                 sla_dev=jnp.asarray(sla_dev),
                 sla_ten=jnp.asarray(sla_ten),
             )
+            if self._mesh is not None:
+                # pin the persistent arrays to their mesh shards once, so
+                # per-step dispatch moves only telemetry, not topology
+                from repro.fleet import sharded as _sharded
+
+                sh = _sharded.domain_sharding(self._mesh)
+                self._dom = jax.tree_util.tree_map(
+                    lambda a: jax.device_put(a, sh), self._dom
+                )
 
     # -- tenant SLA plumbing -----------------------------------------------
 
-    def _build_engine(
-        self, k: int, p: FlatPDN, row_bounds=None
-    ) -> AllocEngine:
+    def _build_engine(self, k: int, p: FlatPDN, row_bounds=None) -> AllocEngine:
         """Loop-mode per-domain engine, with its local SLA structure.
         ``row_bounds`` (all domains' initial SLA bounds) avoids recomputing
         the entitlement split per engine when building K at once."""
@@ -593,9 +641,7 @@ class FleetOrchestrator:
         dmin = np.array([l.sum() for l in dev_l])
         dmin = dmin + self._sla_lifts(dev_l, dev_u, sla or self._sla)
         if dcap_eff is None:
-            dcap_eff = (
-                np.array([c[0] for c in self._node_cap]) * self._domain_supply
-            )
+            dcap_eff = np.array([c[0] for c in self._node_cap]) * self._domain_supply
         bad = np.nonzero(dmin > dcap_eff + 1e-9)[0]
         if bad.size:
             k = int(bad[0])
@@ -607,8 +653,10 @@ class FleetOrchestrator:
             )
         scale = self._feed_scale if feed_scale is None else feed_scale
         check_caps_fund_minimums(
-            self.coordinator.start, self.coordinator.end,
-            self.coordinator.cap * scale, dmin,
+            self.coordinator.start,
+            self.coordinator.end,
+            self.coordinator.cap * scale,
+            dmin,
             what="derated coordinator row",
         )
 
@@ -646,7 +694,10 @@ class FleetOrchestrator:
         if (new_l < 0).any() or (new_l > new_u + 1e-12).any():
             raise ValueError("device limits must satisfy 0 <= l <= u")
         check_caps_fund_minimums(
-            p.node_start, p.node_end, new_cap, new_l,
+            p.node_start,
+            p.node_end,
+            new_cap,
+            new_l,
             what=f"domain {k} node",
         )
         # an active derate must also still fund the (possibly raised) floor
@@ -671,7 +722,9 @@ class FleetOrchestrator:
             # could spuriously fail a join that the next grant would fund
             # (the grant is re-applied by set_root_cap on the next step)
             self._engines[k].repin(
-                dev_l=new_l, dev_u=new_u, node_cap=new_cap,
+                dev_l=new_l,
+                dev_u=new_u,
+                node_cap=new_cap,
                 reset_warm=reset_warm,
             )
         else:
@@ -728,14 +781,10 @@ class FleetOrchestrator:
                 tenant_of = np.full(new_pdn.n, -1, np.int32)
             tenant_of = np.asarray(tenant_of, np.int32)
             if tenant_of.shape != (new_pdn.n,):
-                raise ValueError(
-                    f"tenant_of shape {tenant_of.shape} != ({new_pdn.n},)"
-                )
+                raise ValueError(f"tenant_of shape {tenant_of.shape} != ({new_pdn.n},)")
             lists = self._tenant_of_list()
             lists[k] = tenant_of
-            candidate_sla = build_fleet_sla(
-                lists, self._sla.b_min, self._sla.b_max
-            )
+            candidate_sla = build_fleet_sla(lists, self._sla.b_min, self._sla.b_max)
         elif tenant_of is not None:
             raise ValueError("orchestrator was built without tenants")
         if self.mode == "stacked":
@@ -764,12 +813,12 @@ class FleetOrchestrator:
             dev_u_new = list(self._dev_u)
             dev_l_new[k] = new_pdn.dev_l
             dev_u_new[k] = new_pdn.dev_u
-            dcap_eff = (
-                np.array([c[0] for c in self._node_cap]) * self._domain_supply
-            )
+            dcap_eff = np.array([c[0] for c in self._node_cap]) * self._domain_supply
             dcap_eff[k] = new_pdn.node_cap[0] * self._domain_supply[k]
             self._check_effective_floors(
-                dev_l=dev_l_new, dev_u=dev_u_new, dcap_eff=dcap_eff,
+                dev_l=dev_l_new,
+                dev_u=dev_u_new,
+                dcap_eff=dcap_eff,
                 sla=candidate_sla,
             )
         self._local_pdn[k] = new_pdn
@@ -805,7 +854,10 @@ class FleetOrchestrator:
         dcap, ccap, dmin = self._effective_domain_caps()
         if self._sla is None:
             grants = self.coordinator.plan(
-                demand, domain_cap=dcap, coord_cap=ccap, domain_min=dmin,
+                demand,
+                domain_cap=dcap,
+                coord_cap=ccap,
+                domain_min=dmin,
                 domain_n=self.domain_sizes,
             )
             return grants, None, None, None
@@ -851,20 +903,30 @@ class FleetOrchestrator:
         active = np.asarray(active, bool)
         if active.shape != (n,):
             raise ValueError(f"active shape {active.shape} != ({n},)")
-        l_all = self.device_bounds()
-        u_all = self.device_caps()
-        shaped = np.where(active, np.clip(req, l_all, u_all), l_all)
         offs = self._offsets()
-        demand = np.array(
-            [shaped[offs[k] : offs[k + 1]].sum() for k in range(self.k)]
-        )
-        grants, row_bounds, slice_lo, slice_hi = self._plan(demand, shaped)
-        t0 = time.perf_counter()
-        if self.mode == "stacked":
-            res = self._step_stacked(req, active, grants, offs, row_bounds)
+        if self.mode == "sharded":
+            # demand aggregation + coordinator plan live INSIDE the sharded
+            # program (the one cross-shard reduction); the host only shapes
+            # the [K, N] scatter and the demand-free planning arrays
+            t0 = time.perf_counter()
+            res, grants, demand, slice_lo, slice_hi = self._step_sharded(
+                req, active, offs
+            )
+            wall = time.perf_counter() - t0
         else:
-            res = self._step_loop(req, active, grants, offs, row_bounds)
-        wall = time.perf_counter() - t0
+            l_all = self.device_bounds()
+            u_all = self.device_caps()
+            shaped = np.where(active, np.clip(req, l_all, u_all), l_all)
+            demand = np.array(
+                [shaped[offs[k] : offs[k + 1]].sum() for k in range(self.k)]
+            )
+            grants, row_bounds, slice_lo, slice_hi = self._plan(demand, shaped)
+            t0 = time.perf_counter()
+            if self.mode == "stacked":
+                res = self._step_stacked(req, active, grants, offs, row_bounds)
+            else:
+                res = self._step_loop(req, active, grants, offs, row_bounds)
+            wall = time.perf_counter() - t0
         if slice_lo is not None:
             res[1]["slice_lo"] = slice_lo
             res[1]["slice_hi"] = slice_hi
@@ -919,9 +981,7 @@ class FleetOrchestrator:
             )
             x3 = np.asarray(x3.block_until_ready())
         self._warm = carry
-        alloc = np.concatenate(
-            [x3[k, : int(self.domain_sizes[k])] for k in range(K)]
-        )
+        alloc = np.concatenate([x3[k, : int(self.domain_sizes[k])] for k in range(K)])
         return alloc, {
             "solves": np.asarray(stats["solves"]),
             "iterations": np.asarray(stats["iterations"]),
@@ -932,6 +992,131 @@ class FleetOrchestrator:
             "converged": np.asarray(stats["converged"]),
             "mode": "stacked",
         }
+
+    def _sharded_plan(self):
+        """(PlanRep, RowMaps | None): demand-independent planning arrays for
+        the sharded program, from the same host mirrors (and with the same
+        per-step validation) as the stacked planner."""
+        from repro.fleet import sharded as shd
+
+        dcap, ccap, dmin = self._effective_domain_caps()
+        dt = self.dtype
+        sla = self._sla
+        S = sla.n_slices if sla is not None else 0
+        rowmap = None
+        slice_lo = np.zeros(0)
+        slice_umax = np.zeros(0)
+        ten_start = np.zeros(0, np.int32)
+        ten_end = np.zeros(0, np.int32)
+        b_max_c = np.zeros(0)
+        if sla is not None:
+            sf, su, _ = self._slice_aggregates(self._dev_l, self._dev_u)
+            lift = self._local_lift(self._dev_l, self._dev_u)
+            if S:
+                check_tenants_deliverable(sla, sf, su)
+                slice_lo, _ = split_entitlements(sla, sf, su, sf)
+                slice_umax = su
+                ten_start, ten_end = sla.ten_start, sla.ten_end
+                b_max_c = sla.b_max[sla.cross_ids]
+                np.add.at(lift, sla.slice_domain, slice_lo - sf)
+            dmin = dmin + lift
+            # [K, T] row routing: slice rows gather the coordinator split,
+            # local rows carry their contract, pad rows stay [0, inf)
+            K, T = self.k, self._T
+            idx = np.full((K, T), S, np.int32)
+            lo_local = np.zeros((K, T))
+            hi_local = np.full((K, T), np.inf)
+            for k in range(K):
+                for r, t in enumerate(sla.rows[k]):
+                    s = int(sla.row_slice[k][r])
+                    if s >= 0:
+                        idx[k, r] = s
+                    else:
+                        lo_local[k, r] = sla.b_min[t]
+                        hi_local[k, r] = sla.b_max[t]
+            rowmap = shd.RowMaps(
+                slice_idx=jnp.asarray(idx),
+                lo_local=jnp.asarray(lo_local, dt),
+                hi_local=jnp.asarray(hi_local, dt),
+            )
+        # same fail-fast as the host coordinator's _grants
+        bad = np.nonzero(dmin > dcap + 1e-9)[0]
+        if bad.size:
+            k = int(bad[0])
+            raise ValueError(
+                f"domain {k} minimum draw {dmin[k]:.1f} W exceeds its "
+                f"(possibly derated) capacity {dcap[k]:.1f} W; mask devices "
+                "out first (FleetLifecycle.device_leave)"
+            )
+        check_caps_fund_minimums(
+            self.coordinator.start,
+            self.coordinator.end,
+            ccap,
+            dmin,
+            what="coordinator row",
+        )
+        rep = shd.PlanRep(
+            dmin_tot=jnp.asarray(dmin, dt),
+            dcap=jnp.asarray(dcap, dt),
+            ccap=jnp.asarray(ccap, dt),
+            coord_start=jnp.asarray(self.coordinator.start),
+            coord_end=jnp.asarray(self.coordinator.end),
+            slice_lo=jnp.asarray(slice_lo, dt),
+            slice_umax=jnp.asarray(slice_umax, dt),
+            ten_start=jnp.asarray(ten_start),
+            ten_end=jnp.asarray(ten_end),
+            b_max_c=jnp.asarray(b_max_c, dt),
+        )
+        return rep, rowmap
+
+    def _step_sharded(self, req, active, offs):
+        from repro.fleet import sharded as shd
+
+        K, N = self.k, self._N
+        r = np.zeros((K, N))
+        act = np.zeros((K, N), bool)
+        for k in range(K):
+            nk = int(self.domain_sizes[k])
+            r[k, :nk] = req[offs[k] : offs[k + 1]]
+            act[k, :nk] = active[offs[k] : offs[k + 1]]
+        with self._ctx():
+            rep, rowmap = self._sharded_plan()
+            x3, carry, stats, grants, demand, slo, shi = shd.step(
+                self._dom,
+                jnp.asarray(self._cap_np, self.dtype),
+                jnp.asarray(r, self.dtype),
+                jnp.asarray(act),
+                rowmap,
+                self._warm,
+                rep,
+                mesh=self._mesh,
+                meta=self.meta,
+                opts=self.options.solver,
+                coord_mode=self.coordinator.mode,
+            )
+            x3 = np.asarray(x3.block_until_ready())
+        self._warm = carry
+        alloc = np.concatenate([x3[k, : int(self.domain_sizes[k])] for k in range(K)])
+        has_slices = self._sla is not None and self._sla.n_slices > 0
+        return (
+            (
+                alloc,
+                {
+                    "solves": np.asarray(stats["solves"]),
+                    "iterations": np.asarray(stats["iterations"]),
+                    "iterations_per_phase": np.stack(
+                        [np.asarray(stats[f"iterations_p{i}"]) for i in (1, 2, 3)],
+                        axis=-1,
+                    ),
+                    "converged": np.asarray(stats["converged"]),
+                    "mode": "sharded",
+                },
+            ),
+            np.asarray(grants),
+            np.asarray(demand),
+            np.asarray(slo) if has_slices else None,
+            np.asarray(shi) if has_slices else None,
+        )
 
     def _step_loop(self, req, active, grants, offs, row_bounds=None):
         assert self._engines is not None

@@ -262,9 +262,7 @@ def _extract_domain(pdn: FlatPDN, index: int, node_lo: int, node_hi: int) -> Dom
         node_end=(pdn.node_end[node_sl] - dev_lo).astype(np.int32),
         node_cap=pdn.node_cap[node_sl].copy(),
         node_parent=parent.astype(np.int32),
-        node_depth=(pdn.node_depth[node_sl] - pdn.node_depth[node_lo]).astype(
-            np.int32
-        ),
+        node_depth=(pdn.node_depth[node_sl] - pdn.node_depth[node_lo]).astype(np.int32),
         dev_l=pdn.dev_l[dev_lo:dev_hi].copy(),
         dev_u=pdn.dev_u[dev_lo:dev_hi].copy(),
         dev_node=(pdn.dev_node[dev_lo:dev_hi] - node_lo).astype(np.int32),

@@ -30,8 +30,9 @@ __all__ = ["flash_attention"]
 NEG_INF = -1e30
 
 
-def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-               scale, causal, bq, bk, offset):
+def _fa_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale, causal, bq, bk, offset
+):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -50,9 +51,7 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     ) * scale  # [bq, bk]
     if causal:
         # align last query with last key (Sq may be < Sk: decode-style)
-        qpos = qi * bq + offset + jax.lax.broadcasted_iota(
-            jnp.int32, (bq, bk), 0
-        )
+        qpos = qi * bq + offset + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
         kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
         logits = jnp.where(qpos >= kpos, logits, NEG_INF)
 
@@ -62,7 +61,9 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     corr = jnp.exp(m_prev - m_new)
     l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
     acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
-        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        p.astype(v.dtype),
+        v,
+        (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
     m_scr[...] = m_new
@@ -73,9 +74,7 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("causal", "bq", "bk", "interpret")
-)
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
 def flash_attention(q, k, v, *, causal=True, bq=512, bk=512, interpret=True):
     """q: [B,Sq,H,dh]; k,v: [B,Sk,KV,dh] -> [B,Sq,H,dh].
 
@@ -104,7 +103,11 @@ def flash_attention(q, k, v, *, causal=True, bq=512, bk=512, interpret=True):
 
     out = pl.pallas_call(
         functools.partial(
-            _fa_kernel, scale=scale, causal=causal, bq=bq, bk=bk,
+            _fa_kernel,
+            scale=scale,
+            causal=causal,
+            bq=bq,
+            bk=bk,
             offset=Sk - Sq,
         ),
         grid=grid,

@@ -11,9 +11,20 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.pdhg_update.kernel import dual_prox, primal_update
+from repro.kernels.pdhg_update.kernel import (
+    dual_chunk_stats,
+    dual_prox,
+    primal_chunk_stats,
+    primal_update,
+)
 
-__all__ = ["primal_update", "dual_prox", "default_interpret"]
+__all__ = [
+    "primal_update",
+    "dual_prox",
+    "primal_chunk_stats",
+    "dual_chunk_stats",
+    "default_interpret",
+]
 
 
 def default_interpret() -> bool:

@@ -4,7 +4,12 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["primal_update_ref", "dual_prox_ref"]
+__all__ = [
+    "primal_update_ref",
+    "dual_prox_ref",
+    "primal_chunk_stats_ref",
+    "dual_chunk_stats_ref",
+]
 
 
 def primal_update_ref(x, gx, c, w, target, lo, hi, tau):
@@ -13,9 +18,7 @@ def primal_update_ref(x, gx, c, w, target, lo, hi, tau):
     x1 = clip((x - tau*(gx + c) + tau*w*target) / (1 + tau*w), lo, hi)
     xe = 2*x1 - x
     """
-    x1 = jnp.clip(
-        (x - tau * (gx + c) + tau * w * target) / (1.0 + tau * w), lo, hi
-    )
+    x1 = jnp.clip((x - tau * (gx + c) + tau * w * target) / (1.0 + tau * w), lo, hi)
     return x1, 2.0 * x1 - x
 
 
@@ -24,3 +27,28 @@ def dual_prox_ref(y, a, sigma, lo, hi):
     z - sigma * clip(z / sigma, lo, hi)."""
     z = y + sigma * a
     return z - sigma * jnp.clip(z / sigma, lo, hi)
+
+
+def primal_chunk_stats_ref(x, px, rx, ax, cnt):
+    """Chunk-boundary primal bookkeeping: average accumulation + move norms
+    + current/average restart-candidate travel (squared)."""
+    axn = ax + x
+    return (
+        axn,
+        jnp.max(jnp.abs(x - px)),
+        jnp.max(jnp.abs(x)),
+        jnp.sum((x - rx) ** 2),
+        jnp.sum((axn / cnt - rx) ** 2),
+    )
+
+
+def dual_chunk_stats_ref(y, ry, ay, cnt):
+    """Chunk-boundary dual bookkeeping: average accumulation +
+    current/average/zero-dual restart-candidate travel (squared)."""
+    ayn = ay + y
+    return (
+        ayn,
+        jnp.sum((y - ry) ** 2),
+        jnp.sum((ayn / cnt - ry) ** 2),
+        jnp.sum(ry * ry),
+    )

@@ -1,3 +1,8 @@
-from repro.kernels.tree_matvec.ops import tree_matvec, tree_rmatvec
+from repro.kernels.tree_matvec.ops import (
+    sla_matvec,
+    sla_rmatvec,
+    tree_matvec,
+    tree_rmatvec,
+)
 
-__all__ = ["tree_matvec", "tree_rmatvec"]
+__all__ = ["sla_matvec", "sla_rmatvec", "tree_matvec", "tree_rmatvec"]

@@ -1,7 +1,13 @@
-"""Jitted public wrappers for the tree-matvec kernel (interpret=True on CPU)."""
+"""Jitted public wrappers for the tree/segment matvec kernels
+(interpret=True on CPU)."""
 
 from __future__ import annotations
 
-from repro.kernels.tree_matvec.kernel import tree_matvec, tree_rmatvec
+from repro.kernels.tree_matvec.kernel import (
+    sla_matvec,
+    sla_rmatvec,
+    tree_matvec,
+    tree_rmatvec,
+)
 
-__all__ = ["tree_matvec", "tree_rmatvec"]
+__all__ = ["sla_matvec", "sla_rmatvec", "tree_matvec", "tree_rmatvec"]

@@ -1,10 +1,16 @@
-"""Pure-jnp oracle for the tree-constraint matvec kernel."""
+"""Pure-jnp oracle for the tree/segment matvec kernels."""
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
-__all__ = ["tree_matvec_ref", "tree_rmatvec_ref"]
+__all__ = [
+    "tree_matvec_ref",
+    "tree_rmatvec_ref",
+    "sla_matvec_ref",
+    "sla_rmatvec_ref",
+]
 
 
 def tree_matvec_ref(x, start, end):
@@ -19,3 +25,18 @@ def tree_rmatvec_ref(y, start, end, n):
     diff = diff.at[start].add(y)
     diff = diff.at[end].add(-y)
     return jnp.cumsum(diff)[:n]
+
+
+def sla_matvec_ref(x, dev, ten, k):
+    """Per-tenant sums over the incidence edge list."""
+    if dev.shape[0] == 0:
+        return jnp.zeros((k,), x.dtype)
+    return jax.ops.segment_sum(x[dev], ten, num_segments=k)
+
+
+def sla_rmatvec_ref(y, dev, ten, n):
+    """Adjoint: device d accumulates its tenants' duals."""
+    out = jnp.zeros((n,), y.dtype)
+    if dev.shape[0] == 0:
+        return out
+    return out.at[dev].add(y[ten])

@@ -160,8 +160,12 @@ def test_fleet_sla_parity_vs_monolithic(slack_pdn, mode):
         slack_pdn, sla=lay.sla_topo(), priority=lay.priority, options=OPTS
     )
     orch = FleetOrchestrator(
-        slack_pdn, level=1, coordinator_mode="subtree", tenants=lay,
-        mode=mode, options=OPTS,
+        slack_pdn,
+        level=1,
+        coordinator_mode="subtree",
+        tenants=lay,
+        mode=mode,
+        options=OPTS,
     )
     rng = np.random.default_rng(0)
     t_of = lay.tenant_of
@@ -203,7 +207,10 @@ def test_brownout_honors_tenant_minimums(binding_pdn):
     t_of[[0, 1, 16, 17]] = 0  # cross-cut tenant over both domains
     umax = pdn.dev_u[t_of == 0].sum()
     lay = TenantLayout(
-        t_of, 1, np.array([0.7 * umax]), np.array([0.9 * umax]),
+        t_of,
+        1,
+        np.array([0.7 * umax]),
+        np.array([0.9 * umax]),
         np.ones(pdn.n, np.int32),
     )
     orch = FleetOrchestrator(pdn, level=1, tenants=lay, options=OPTS)
@@ -267,9 +274,7 @@ def test_sla_churn_and_grants_zero_retrace(slack_pdn):
 
 def test_loop_sla_grants_zero_engine_retrace(slack_pdn):
     lay = _layout(slack_pdn)
-    orch = FleetOrchestrator(
-        slack_pdn, level=1, tenants=lay, mode="loop", options=OPTS
-    )
+    orch = FleetOrchestrator(slack_pdn, level=1, tenants=lay, mode="loop", options=OPTS)
     tele = np.random.default_rng(9).uniform(500, 690, slack_pdn.n)
     orch.step(tele)
     orch.step(tele)
@@ -354,13 +359,53 @@ def test_rebuild_orphaning_contracted_tenant_rejected(slack_pdn):
     assert res.stats["converged"].all()
 
 
+def test_domain_failover_evacuates_tenants(slack_pdn):
+    """Domain-failover beyond brownout (ISSUE 6): a domain dies outright —
+    its hardware draws nothing and its feed is derated to zero — and
+    ``rebuild_domain`` evacuates its tenant devices so the cross-cut
+    tenant's full contractual minimum is served by the surviving domain.
+    The whole failover (and the later recovery) re-pins traced arrays
+    only: zero recompiles in stacked mode."""
+    import dataclasses as dc
+
+    lay = _layout(slack_pdn, lo_frac=0.4)  # b_min 1120 W <= 1400 W (dom 0)
+    orch = FleetOrchestrator(
+        slack_pdn, level=1, tenants=lay, mode="stacked", options=OPTS
+    )
+    t_of = lay.tenant_of
+    tele = np.random.default_rng(12).uniform(500, 690, slack_pdn.n)
+    orch.step(tele)
+    orch.step(tele)  # compile cold + warm-carry variants
+    f0, e0 = orch_mod.trace_count(), engine_mod.trace_count()
+    # domain 1 dies: dead hardware has no floors, carries no tenants
+    d1 = orch.partition.domains[1]
+    dead = dc.replace(d1.pdn, dev_l=np.zeros_like(d1.pdn.dev_l))
+    orch.rebuild_domain(1, dead)  # default tenant_of: evacuates tenant 0
+    orch.set_domain_supply(1, 0.0)  # the dead feed grants nothing
+    res = orch.step(tele)
+    offs = orch._offsets()
+    np.testing.assert_allclose(res.allocation[offs[1] :], 0.0, atol=1e-9)
+    # the evacuated tenant's minimum is served entirely by domain 0
+    s = res.allocation[: offs[1]][t_of[: offs[1]] == 0].sum()
+    assert s >= lay.b_min[0] - 1e-4
+    assert res.stats["converged"].all()
+    # recovery: feed restored, replacement hardware re-hosts the tenant
+    orch.set_domain_supply(1, 1.0)
+    t_of1 = np.full(d1.pdn.n, -1, np.int32)
+    t_of1[[0, 1]] = 0
+    orch.rebuild_domain(1, d1.pdn, tenant_of=t_of1)
+    assert orch._sla.cross.tolist() == [True, False]
+    res = orch.step(tele)
+    assert res.allocation[t_of == 0].sum() >= lay.b_min[0] - 1e-4
+    assert orch_mod.trace_count() - f0 == 0  # failover never recompiles
+    assert engine_mod.trace_count() - e0 == 0
+
+
 def test_loop_raise_tenant_minimum_from_zero(slack_pdn):
     """Loop-mode engines must accept SLA lower bounds raised from zero at
     runtime (the pin-free simplification stays off for SLA domains)."""
     lay = _layout(slack_pdn, lo_frac=0.0)  # all contracts start at b_min=0
-    orch = FleetOrchestrator(
-        slack_pdn, level=1, tenants=lay, mode="loop", options=OPTS
-    )
+    orch = FleetOrchestrator(slack_pdn, level=1, tenants=lay, mode="loop", options=OPTS)
     tele = np.random.default_rng(11).uniform(250, 400, slack_pdn.n)
     orch.step(tele)
     orch.set_tenant_bounds(0, b_min=0.45 * 2800.0)  # raise cross-cut min

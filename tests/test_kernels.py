@@ -13,10 +13,30 @@ from repro.compat import enable_x64
 
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.pdhg_update import dual_prox, primal_update
-from repro.kernels.pdhg_update.ref import dual_prox_ref, primal_update_ref
-from repro.kernels.tree_matvec import tree_matvec, tree_rmatvec
-from repro.kernels.tree_matvec.ref import tree_matvec_ref, tree_rmatvec_ref
+from repro.kernels.pdhg_update import (
+    dual_chunk_stats,
+    dual_prox,
+    primal_chunk_stats,
+    primal_update,
+)
+from repro.kernels.pdhg_update.ref import (
+    dual_chunk_stats_ref,
+    dual_prox_ref,
+    primal_chunk_stats_ref,
+    primal_update_ref,
+)
+from repro.kernels.tree_matvec import (
+    sla_matvec,
+    sla_rmatvec,
+    tree_matvec,
+    tree_rmatvec,
+)
+from repro.kernels.tree_matvec.ref import (
+    sla_matvec_ref,
+    sla_rmatvec_ref,
+    tree_matvec_ref,
+    tree_rmatvec_ref,
+)
 from repro.pdn.tree import build_from_level_sizes
 
 
@@ -44,8 +64,12 @@ def test_primal_update_sweep(n, dtype, vector_tau):
         tau = jnp.abs(mk()) + dtype(0.05) if vector_tau else dtype(0.37)
         x1, xe = primal_update(x, gx, c, w, target, lo, hi, tau)
         rx1, rxe = primal_update_ref(x, gx, c, w, target, lo, hi, tau)
-        np.testing.assert_allclose(np.asarray(x1), np.asarray(rx1), rtol=1e-6, atol=1e-6)
-        np.testing.assert_allclose(np.asarray(xe), np.asarray(rxe), rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(x1), np.asarray(rx1), rtol=1e-6, atol=1e-6
+        )
+        np.testing.assert_allclose(
+            np.asarray(xe), np.asarray(rxe), rtol=1e-6, atol=1e-6
+        )
 
 
 @pytest.mark.parametrize("n", [5, 1024, 9000])
@@ -64,7 +88,9 @@ def test_dual_prox_sweep(n, dtype, vector_sigma):
         sigma = jnp.abs(mk()) + dtype(0.05) if vector_sigma else dtype(0.21)
         out = dual_prox(y, a, sigma, lo, hi)
         ref = dual_prox_ref(y, a, sigma, lo, hi)
-        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), rtol=1e-6, atol=1e-6
+        )
 
 
 def test_pdhg_solve_pallas_parity():
@@ -79,13 +105,9 @@ def test_pdhg_solve_pallas_parity():
     pdn = build_from_level_sizes([2, 3, 2], gpus_per_server=4)
     layout = assign_tenants(pdn, n_tenants=4, devices_per_tenant=8, seed=1)
     tele = np.random.default_rng(3).uniform(100, 650, pdn.n)
-    ap = AllocProblem.build(
-        pdn, tele, sla=layout.sla_topo(), priority=layout.priority
-    )
+    ap = AllocProblem.build(pdn, tele, sla=layout.sla_topo(), priority=layout.priority)
     ref = optimize(ap)
-    pal = optimize(
-        ap, NvpaxOptions(solver=pdhg.SolverOptions(use_pallas=True))
-    )
+    pal = optimize(ap, NvpaxOptions(solver=pdhg.SolverOptions(use_pallas=True)))
     np.testing.assert_allclose(pal.allocation, ref.allocation, atol=1e-9)
     assert pal.stats["total_iterations"] == ref.stats["total_iterations"]
 
@@ -120,9 +142,124 @@ def test_tree_rmatvec_sweep(sizes):
     end = jnp.asarray(pdn.node_end)
     got = tree_rmatvec(y, start, end, pdn.n)
     want = tree_rmatvec_ref(y, start, end, pdn.n)
-    np.testing.assert_allclose(
-        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("block", [64, 256])
+def test_tree_matvec_chunked_multi_block(block):
+    """Small block/row_block force multi-block prefix grids with cross-block
+    offset propagation — the path the O(100k)-device fleets exercise."""
+    pdn = build_from_level_sizes([3, 2, 2], gpus_per_server=4)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=pdn.n), jnp.float32)
+    start = jnp.asarray(pdn.node_start)
+    end = jnp.asarray(pdn.node_end)
+    got = tree_matvec(x, start, end, block=block, row_block=block)
+    want = tree_matvec_ref(x, start, end)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+    y = jnp.asarray(rng.normal(size=pdn.m), jnp.float32)
+    got = tree_rmatvec(y, start, end, pdn.n, block=block, row_block=block)
+    want = tree_rmatvec_ref(y, start, end, pdn.n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("edge_block", [16, 4096])
+@pytest.mark.parametrize("n_edges", [0, 7, 300])
+def test_sla_matvec_sweep(edge_block, n_edges):
+    """Tenant segment sums + adjoint over random incidence edge lists,
+    including the empty-tenancy fast path and multi-block edge grids."""
+    n, k = 96, 5
+    rng = np.random.default_rng(n_edges + edge_block)
+    dev = jnp.asarray(rng.integers(0, n, n_edges), jnp.int32)
+    ten = jnp.asarray(rng.integers(0, k, n_edges), jnp.int32)
+    x = jnp.asarray(rng.normal(size=n), jnp.float32)
+    y = jnp.asarray(rng.normal(size=k), jnp.float32)
+    got = sla_matvec(x, dev, ten, k, edge_block=edge_block)
+    want = sla_matvec_ref(x, dev, ten, k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+    got = sla_rmatvec(y, dev, ten, n, edge_block=edge_block)
+    want = sla_rmatvec_ref(y, dev, ten, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# chunk-boundary restart/KKT stats epilogues
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [9, 1000, 20000])
+@pytest.mark.parametrize("block", [128, 8192])
+def test_chunk_stats_match_refs(n, block):
+    """The fused per-block partials reduce to the jnp oracle values (exact
+    zeros from padded lanes; max/sum associativity differences stay at
+    roundoff)."""
+    rng = np.random.default_rng(n)
+
+    def mk(size):
+        return jnp.asarray(rng.normal(size=size), jnp.float32)
+
+    x, px, rx, ax = mk(n), mk(n), mk(n), mk(n)
+    cnt = jnp.float32(17.0)
+    got = primal_chunk_stats(x, px, rx, ax, cnt, block=block)
+    want = primal_chunk_stats_ref(x, px, rx, ax, cnt)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=2e-5, atol=2e-5)
+    y, ry, ay = mk(n), mk(n), mk(n)
+    got = dual_chunk_stats(y, ry, ay, cnt, block=block)
+    want = dual_chunk_stats_ref(y, ry, ay, cnt)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# solver knobs: Pallas-native routing + blockwise omega
+# ---------------------------------------------------------------------------
+
+
+def _knob_problem():
+    from repro.core.problem import AllocProblem
+    from repro.pdn.tenants import assign_tenants
+
+    pdn = build_from_level_sizes([2, 3, 2], gpus_per_server=4)
+    layout = assign_tenants(pdn, n_tenants=4, devices_per_tenant=8, seed=1)
+    tele = np.random.default_rng(3).uniform(100, 650, pdn.n)
+    return AllocProblem.build(
+        pdn, tele, sla=layout.sla_topo(), priority=layout.priority
     )
+
+
+def test_solver_pallas_tree_and_stats_parity():
+    """use_pallas_tree / use_pallas_stats route the inner matvecs and the
+    chunk-boundary bookkeeping through the kernels without changing the
+    solution (iterate paths agree up to reduction association)."""
+    from repro.core import pdhg
+    from repro.core.nvpax import NvpaxOptions, optimize
+
+    ap = _knob_problem()
+    ref = optimize(ap)
+    for knob in ("use_pallas_tree", "use_pallas_stats"):
+        opts = NvpaxOptions(solver=pdhg.SolverOptions(**{knob: True}))
+        got = optimize(ap, opts)
+        np.testing.assert_allclose(
+            got.allocation, ref.allocation, atol=1e-7, err_msg=knob
+        )
+        assert got.stats["converged"]
+
+
+def test_solver_blockwise_omega_converges_same_solution():
+    """Per-dual-block primal weights change the iterate path but must land
+    on the same certified allocation within solve tolerance."""
+    from repro.core import pdhg
+    from repro.core.nvpax import NvpaxOptions, optimize
+
+    ap = _knob_problem()
+    tight = dict(eps_abs=1e-9, eps_rel=1e-9)
+    ref = optimize(ap, NvpaxOptions(solver=pdhg.SolverOptions(**tight)))
+    got = optimize(
+        ap, NvpaxOptions(solver=pdhg.SolverOptions(blockwise_omega=True, **tight))
+    )
+    assert got.stats["converged"]
+    np.testing.assert_allclose(got.allocation, ref.allocation, atol=1e-5)
 
 
 # ---------------------------------------------------------------------------
@@ -146,9 +283,7 @@ def test_flash_attention_sweep(B, Sq, Sk, H, KV, dh, causal):
     v = jnp.asarray(rng.normal(size=(B, Sk, KV, dh)), jnp.float32)
     out = flash_attention(q, k, v, causal=causal, bq=64, bk=64)
     ref = attention_ref(q, k, v, causal=causal)
-    np.testing.assert_allclose(
-        np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-3
-    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-3)
 
 
 @pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
@@ -161,8 +296,10 @@ def test_flash_attention_dtypes(dtype):
     ref = attention_ref(q, k, v, causal=True)
     tol = 3e-2 if dtype == jnp.bfloat16 else 2e-3
     np.testing.assert_allclose(
-        np.asarray(out, np.float32), np.asarray(ref, np.float32),
-        rtol=tol, atol=tol,
+        np.asarray(out, np.float32),
+        np.asarray(ref, np.float32),
+        rtol=tol,
+        atol=tol,
     )
 
 
@@ -200,8 +337,7 @@ def test_flash_vjp_forward_and_grads(causal, rep):
 
     out = blocked_attention_mo(q, k, v, causal, scale, 32, 32)
     ref = attention_ref(q, k, v, causal=causal)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
-                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
 
     def f_mo(q, k, v):
         return jnp.vdot(blocked_attention_mo(q, k, v, causal, scale, 32, 32), ct)
@@ -213,6 +349,9 @@ def test_flash_vjp_forward_and_grads(causal, rep):
     g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
     for a, b, name in zip(g_mo, g_ref, "qkv"):
         np.testing.assert_allclose(
-            np.asarray(a), np.asarray(b), rtol=2e-3, atol=2e-3,
+            np.asarray(a),
+            np.asarray(b),
+            rtol=2e-3,
+            atol=2e-3,
             err_msg=f"d{name} mismatch",
         )

@@ -62,9 +62,7 @@ def degenerate_lp(ap):
     mask_a = ap.active & ~phases.saturated_mask(x1, ap, ap.active)
     assert bool(np.asarray(mask_a).any())
     prob = phases.lp_step(ap, x1, mask_a, ~(mask_a | ap.idle), ap.idle, 1e-5)
-    warm = solver.SolverState(
-        x1, jnp.zeros(()), state.y_tree, state.y_sla, state.y_imp
-    )
+    warm = solver.SolverState(x1, jnp.zeros(()), state.y_tree, state.y_sla, state.y_imp)
     return prob, warm
 
 
@@ -122,9 +120,7 @@ def test_degenerate_three_phase_paths_agree_and_certify():
     assert bool(np.asarray(batched.stats["converged"]).all())
     assert int(np.asarray(batched.stats["iterations"]).max()) <= 3 * CERT_BUDGET
     np.testing.assert_allclose(batched.allocation[0], host.allocation, atol=1e-6)
-    np.testing.assert_allclose(
-        batched.allocation[1], batched.allocation[0], atol=1e-12
-    )
+    np.testing.assert_allclose(batched.allocation[1], batched.allocation[0], atol=1e-12)
 
     eng = AllocEngine(pdn, sla=lay.sla_topo(), priority=lay.priority)
     r1 = eng.step(tele)
