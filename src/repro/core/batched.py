@@ -83,6 +83,10 @@ class BatchMeta(NamedTuple):
     run_phase2: bool
     run_phase3: bool
     eps: float  # regularization weight
+    # incremental certify-first stepping tolerances (watts; PR 7 — see
+    # repro.core.solver.certify); only consulted when a carry is passed
+    certify_tol: float = 1e-9
+    certify_margin: float = 1e-2
 
 
 class BatchedStepState(NamedTuple):
@@ -108,6 +112,9 @@ class BatchedAllocResult:
     warm_state: Any  # batched phases.WarmCarry ([K, ...] leaves)
     wall_time_s: float
     stats: dict[str, Any]  # per-scenario arrays: solves/iterations/converged
+    # incremental-mode anchor for the next step ([K, ...] leaves; None unless
+    # a carry was threaded in — see repro.core.solver.certify)
+    carry: Any = None
 
 
 def batch_meta(ap: AllocProblem, options: NvpaxOptions) -> BatchMeta:
@@ -121,6 +128,8 @@ def batch_meta(ap: AllocProblem, options: NvpaxOptions) -> BatchMeta:
         run_phase2=options.run_phase2,
         run_phase3=options.run_phase3,
         eps=options.eps,
+        certify_tol=options.certify_tol,
+        certify_margin=options.certify_margin,
     )
 
 
@@ -148,7 +157,9 @@ def stack_problems(aps: Sequence[AllocProblem]) -> AllocProblem:
         ]:
             if a is b:  # shared topology object (controller path): no D2H compare
                 continue
-            if a.shape != b.shape or not bool(np.array_equal(np.asarray(a), np.asarray(b))):
+            if a.shape != b.shape or not bool(
+                np.array_equal(np.asarray(a), np.asarray(b))
+            ):
                 raise ValueError(f"scenario {i} differs from scenario 0 in {name}")
 
     def stk(leaf):
@@ -174,8 +185,15 @@ def _phase1_scan(
     meta: BatchMeta,
     opts: solver.SolverOptions,
     warm: solver.SolverState,
+    skip: jnp.ndarray | None = None,
 ) -> BatchedStepState:
-    """Algorithm 1 as a ``lax.scan`` over the static priority levels."""
+    """Algorithm 1 as a ``lax.scan`` over the static priority levels.
+
+    ``skip`` (incremental mode) gates every level's solve off: the scan
+    returns its init state untouched, and the caller substitutes the
+    carried Phase I point.  Traced, so skip/solve transitions share one
+    compilation.
+    """
     n = ap.n
     init = BatchedStepState(
         x=ap.l,
@@ -215,7 +233,10 @@ def _phase1_scan(
 
         # the host driver only sweeps levels present among this scenario's
         # active devices; skip empty levels to match it exactly
-        st = lax.cond(jnp.any(mask_a), run, lambda s: s, st)
+        pred = jnp.any(mask_a)
+        if skip is not None:
+            pred = pred & ~skip
+        st = lax.cond(pred, run, lambda s: s, st)
         return st, None
 
     levels = jnp.asarray(meta.levels, ap.priority.dtype)
@@ -233,6 +254,7 @@ def _maxmin_loop(
     warm: solver.SolverState,
     iters_before: jnp.ndarray | None = None,
     budget: jnp.ndarray | None = None,
+    skip: jnp.ndarray | None = None,
 ) -> BatchedStepState:
     """Algorithm 2 as a ``lax.while_loop`` (Phase II/III shared driver).
 
@@ -242,6 +264,12 @@ def _maxmin_loop(
     Every round ends with the exact feasibility repair, so the truncated
     allocation is feasible — the same phase/round-boundary-anytime property
     the host driver gets from its wall-clock deadline.
+
+    ``skip`` (incremental mode) enters the loop condition, so a certified
+    step exits before the first round — and under ``vmap`` a skipped lane
+    is frozen by the while-loop batching rule while dirty lanes keep
+    iterating (the "masked solve").  The caller substitutes the carried
+    allocation for skipped lanes.
     """
     dtype = ap.l.dtype
     if meta.use_waterfill and ap.sla.k == 0:
@@ -274,6 +302,8 @@ def _maxmin_loop(
         live = (~st.done) & (st.solves < meta.max_rounds) & jnp.any(st.mask)
         if budget is not None:
             live = live & (iters_before + st.iterations < budget)
+        if skip is not None:
+            live = live & ~skip
         return live
 
     def body(st: BatchedStepState) -> BatchedStepState:
@@ -317,6 +347,7 @@ def solve_three_phase(
     opts: solver.SolverOptions,
     warm: phases.WarmCarry | None = None,
     iter_budget: jnp.ndarray | int | None = None,
+    carry: solver.IncrementalCarry | None = None,
 ):
     """One scenario's full Algorithm 3, trace-safe (jit/vmap-able).
 
@@ -335,16 +366,47 @@ def solve_three_phase(
     the first saturation round that crosses it.  Passing a traced/concrete
     int32 scalar changes the budget without recompilation.
 
+    ``carry`` (incremental mode, PR 7) is the previous accepted step's
+    :class:`repro.core.solver.certify.IncrementalCarry`: a fused certify
+    pass runs first, and on success the carried point short-circuits the
+    whole program (full skip) or Phase I only (Phase I skip) — as traced
+    predicates gating the existing loops, so skip/solve transitions never
+    recompile.
+
     Returns ``(x1, x2, x3, warm_carry, stats_dict)`` with jnp leaves;
     ``stats["truncated"]`` is True when refinement work was skipped or cut
-    short by the budget.
+    short by the budget; ``stats["skipped"]``/``stats["certify_pass"]`` are
+    traced bools present on every path.
     """
     n, m, k = ap.n, ap.tree.m, ap.sla.k
     dtype = ap.l.dtype
     w1 = warm.p1 if warm is not None else solver.SolverState.zeros(n, m, k, dtype)
     budget = None if iter_budget is None else jnp.asarray(iter_budget, jnp.int32)
 
-    p1 = _phase1_scan(ap, meta, opts, w1)
+    if carry is not None:
+        dec = solver.certify_step(
+            ap,
+            carry,
+            meta.n_depths,
+            tol=meta.certify_tol,
+            margin=meta.certify_margin,
+            opts=opts,
+        )
+        skip, skip_p1 = dec.skip, dec.skip_p1
+        skip_any = skip | skip_p1
+    else:
+        skip = skip_any = None
+
+    p1 = _phase1_scan(ap, meta, opts, w1, skip=skip_any)
+    if carry is not None:
+        # substitute the carried Phase I point (both tiers reuse it)
+        carried_sol = solver.SolverState(carry.x1, w1.t, w1.y_tree, w1.y_sla, w1.y_imp)
+        p1 = p1._replace(
+            x=jnp.where(skip_any, carry.x1, p1.x),
+            solver=jax.tree_util.tree_map(
+                lambda c, s: jnp.where(skip_any, c, s), carried_sol, p1.solver
+            ),
+        )
     x1 = p1.x
     truncated = jnp.asarray(False)
 
@@ -363,14 +425,14 @@ def solve_three_phase(
     def refine(x, sol, opt_set, free_set, iters_before):
         """One budget-gated max-min phase; returns (state, truncated_flag)."""
         if budget is None:
-            st = _maxmin_loop(ap, x, opt_set, free_set, meta, opts, sol)
+            st = _maxmin_loop(ap, x, opt_set, free_set, meta, opts, sol, skip=skip)
             return st, jnp.asarray(False)
         start_ok = iters_before < budget
 
         def run(args):
             return _maxmin_loop(
                 ap, args[0], opt_set, free_set, meta, opts, args[1],
-                iters_before, budget,
+                iters_before, budget, skip=skip,
             )
 
         st = lax.cond(start_ok, run, lambda args: skipped(*args), (x, sol))
@@ -378,11 +440,16 @@ def solve_three_phase(
         # test with unsaturated optimizable devices still holding head-room
         work_left = (~st.done) & jnp.any(st.mask) & (st.solves < meta.max_rounds)
         cut = (~start_ok) | (work_left & (iters_before + st.iterations >= budget))
+        if skip is not None:
+            # a certified skip is not a truncation
+            cut = cut & ~skip
         return st, cut
 
     w2 = phases.merge_warm(p1.solver, warm.p2 if warm is not None else None)
     if meta.run_phase2:
         p2, cut2 = refine(x1, w2, ap.active, ap.idle, p1.iterations)
+        if carry is not None:
+            p2 = p2._replace(x=jnp.where(skip, dec.x_snap, p2.x))
         x2 = p2.x
         truncated = truncated | cut2
     else:
@@ -398,6 +465,8 @@ def solve_three_phase(
         empty = jnp.zeros_like(ap.active)
         p3, cut3 = refine(x2, w3, ap.idle, empty,
                           p1.iterations + p2.iterations)
+        if carry is not None:
+            p3 = p3._replace(x=jnp.where(skip, dec.x_snap, p3.x))
         x3 = p3.x
         truncated = truncated | cut3
     else:
@@ -420,9 +489,13 @@ def solve_three_phase(
         "converged": p1.converged & p2.converged & p3.converged,
         "kkt_certified": p1.certified & p2.certified & p3.certified,
         "truncated": truncated,
+        # incremental certify outcome, on every path (False consts when no
+        # carry was given) — jnp scalars so they survive vmap
+        "skipped": jnp.asarray(False) if carry is None else skip,
+        "certify_pass": jnp.asarray(False) if carry is None else skip_any,
     }
-    carry = phases.WarmCarry(p1.solver, p2.solver, p3.solver)
-    return x1, x2, x3, carry, stats
+    wcarry = phases.WarmCarry(p1.solver, p2.solver, p3.solver)
+    return x1, x2, x3, wcarry, stats
 
 
 @functools.partial(jax.jit, static_argnames=("meta", "opts"))
@@ -432,28 +505,104 @@ def _solve_batched(
     opts: solver.SolverOptions,
     warm: phases.WarmCarry | None,
     iter_budget: jnp.ndarray | None = None,
+    carry: solver.IncrementalCarry | None = None,
 ):
-    """vmap of the three-phase engine over the leading scenario axis."""
+    """vmap of the three-phase engine over the leading scenario axis.
+
+    ``carry`` is an :class:`repro.core.solver.certify.IncrementalCarry` with
+    ``[K, ...]`` leaves (incremental mode).  Per-scenario certify flags gate
+    the inner loops (dirty lanes iterate, clean lanes are frozen by the
+    while-loop batching rule), and when *every* scenario certifies a full
+    skip a scalar ``lax.cond`` short-circuits the whole vmapped solve to the
+    O(matvec) assembly below — that is what collapses the quasi-static fleet
+    step to certify cost.  Returns ``(x1, x2, x3, warm_carry, stats,
+    new_carry)``.
+    """
     tree, sla = stacked.tree, stacked.sla
-
-    def one(l, u, r, priority, active, weight_scale, warm_one):
-        ap = AllocProblem(
-            l=l, u=u, r=r, priority=priority, active=active,
-            tree=tree, sla=sla, weight_scale=weight_scale,
-        )
-        return solve_three_phase(ap, meta, opts, warm_one, iter_budget)
-
-    # warm is a phases.WarmCarry with [K, ...] leaves (or None)
-    warm_axes = None if warm is None else 0
-    return jax.vmap(one, in_axes=(0, 0, 0, 0, 0, 0, warm_axes))(
+    fleet_axes = (0, 0, 0, 0, 0, 0)
+    fleet_leaves = (
         stacked.l,
         stacked.u,
         stacked.r,
         stacked.priority,
         stacked.active,
         stacked.weight_scale,
-        warm,
     )
+
+    def one(l, u, r, priority, active, weight_scale, warm_one, carry_one):
+        ap = AllocProblem(
+            l=l, u=u, r=r, priority=priority, active=active,
+            tree=tree, sla=sla, weight_scale=weight_scale,
+        )
+        x1, x2, x3, wc, stats = solve_three_phase(
+            ap, meta, opts, warm_one, iter_budget, carry_one
+        )
+        new_carry = solver.update_carry(
+            carry_one,
+            ap,
+            x1,
+            x3,
+            stats["skipped"],
+            stats["certify_pass"] & ~stats["skipped"],
+        )
+        return x1, x2, x3, wc, stats, new_carry
+
+    # warm/carry are pytrees with [K, ...] leaves (or None)
+    warm_axes = None if warm is None else 0
+
+    def run_vmapped(c):
+        axes = fleet_axes + (warm_axes, None if c is None else 0)
+        return jax.vmap(one, in_axes=axes)(*fleet_leaves, warm, c)
+
+    if carry is None or warm is None:
+        # no anchor yet (or no warm state to thread through the all-skip
+        # assembly): per-lane gating alone
+        return run_vmapped(carry)
+
+    def cert_one(l, u, r, priority, active, weight_scale, carry_one):
+        ap = AllocProblem(
+            l=l, u=u, r=r, priority=priority, active=active,
+            tree=tree, sla=sla, weight_scale=weight_scale,
+        )
+        return solver.certify_step(
+            ap,
+            carry_one,
+            meta.n_depths,
+            tol=meta.certify_tol,
+            margin=meta.certify_margin,
+            opts=opts,
+        )
+
+    dec = jax.vmap(cert_one, in_axes=fleet_axes + (0,))(*fleet_leaves, carry)
+    kk = stacked.l.shape[0]
+
+    def fast(_):
+        # every scenario certified: assemble the exact all-skip outputs the
+        # vmapped program would produce, without running it
+        p1_sol = warm.p1._replace(x=carry.x1)
+        w2 = phases.merge_warm(p1_sol, warm.p2)
+        w3 = phases.merge_warm(w2, warm.p3)
+        zi = jnp.zeros((kk,), jnp.int32)
+        yes = jnp.ones((kk,), bool)
+        stats = {
+            "solves": zi,
+            "iterations": zi,
+            "iterations_p1": zi,
+            "iterations_p2": zi,
+            "iterations_p3": zi,
+            "converged": yes,
+            "kkt_certified": yes,
+            "truncated": jnp.zeros((kk,), bool),
+            "skipped": dec.skip,
+            "certify_pass": dec.skip | dec.skip_p1,
+        }
+        wcarry = phases.WarmCarry(p1_sol, w2, w3)
+        return carry.x1, dec.x_snap, dec.x_snap, wcarry, stats, carry
+
+    def slow(_):
+        return run_vmapped(carry)
+
+    return lax.cond(jnp.all(dec.skip), fast, slow, None)
 
 
 # ---------------------------------------------------------------------------
@@ -550,7 +699,7 @@ def calibrate_phase_cost(
             b = jnp.asarray(budget, jnp.int32)
             _solve_batched(stacked, meta, opts, None, b)[2].block_until_ready()
             t0 = time.perf_counter()
-            _, _, x3, _, stats = _solve_batched(stacked, meta, opts, None, b)
+            _, _, x3, _, stats, _ = _solve_batched(stacked, meta, opts, None, b)
             x3.block_until_ready()
             wall = time.perf_counter() - t0
             per_phase = [
@@ -587,6 +736,7 @@ def optimize_batched(
     *,
     meta: BatchMeta | None = None,
     iter_budget: int | None = None,
+    carry: Any = None,
 ) -> BatchedAllocResult:
     """Run Algorithm 3 on K scenarios as ONE jitted+vmapped program.
 
@@ -610,6 +760,11 @@ def optimize_batched(
     host path's phase-boundary anytime semantics.  ``iter_budget`` passes an
     explicit budget instead (overrides ``deadline_s``).
 
+    Incremental mode: ``carry`` threads the previous step's
+    ``BatchedAllocResult.carry`` back in; per-scenario certify flags land in
+    ``stats["skipped"]``/``stats["certify_pass"]`` (they survive the vmap as
+    ``[K]`` arrays), and an all-skip batch collapses to certify cost.
+
     Output matches per-scenario :func:`repro.core.nvpax.optimize` to solver
     tolerance (asserted in ``tests/test_batched.py``).
     """
@@ -629,8 +784,8 @@ def optimize_batched(
         budget = (
             None if iter_budget is None else jnp.asarray(iter_budget, jnp.int32)
         )
-        x1, x2, x3, sol_state, stats = _solve_batched(
-            stacked, meta, options.solver, warm, budget
+        x1, x2, x3, sol_state, stats, new_carry = _solve_batched(
+            stacked, meta, options.solver, warm, budget, carry
         )
         x3 = x3.block_until_ready()
     wall = time.perf_counter() - t0
@@ -640,6 +795,7 @@ def optimize_batched(
         phase2=np.asarray(x2),
         warm_state=sol_state,
         wall_time_s=wall,
+        carry=new_carry if carry is not None or options.incremental else None,
         stats={
             "solves": np.asarray(stats["solves"]),
             "iterations": np.asarray(stats["iterations"]),
@@ -647,9 +803,16 @@ def optimize_batched(
                 [np.asarray(stats[f"iterations_p{i}"]) for i in (1, 2, 3)],
                 axis=-1,
             ),
+            # uniform name across host optimize / engine / fleet stats
+            "phase_iterations": np.stack(
+                [np.asarray(stats[f"iterations_p{i}"]) for i in (1, 2, 3)],
+                axis=-1,
+            ),
             "converged": np.asarray(stats["converged"]),
             "kkt_certified": np.asarray(stats["kkt_certified"]),
             "truncated": np.asarray(stats["truncated"]),
+            "skipped": np.asarray(stats["skipped"]),
+            "certify_pass": np.asarray(stats["certify_pass"]),
             "iter_budget": iter_budget,
             "n_scenarios": int(stacked.l.shape[0]),
         },

@@ -62,6 +62,7 @@ from repro.core.batched import (
 )
 from repro.core.nvpax import AllocResult, NvpaxOptions
 from repro.core.problem import AllocProblem, FleetTopology
+from repro.core.solver import certify
 from repro.core.treeops import SlaTopo
 from repro.pdn.tree import FlatPDN, check_caps_fund_minimums
 
@@ -88,9 +89,12 @@ def _shape_requests(r, active, l, u):
     return jnp.where(active, jnp.clip(r, l, u), l)
 
 
-def _engine_solve(fleet, r, priority, active, warm, iter_budget, *, meta, opts):
+def _engine_solve(
+    fleet, r, priority, active, warm, iter_budget, carry=None, *, meta, opts
+):
     """The whole control step as one traced program: request pre-processing
-    (paper section 5.2) + three-phase solve + exact feasibility repair."""
+    (paper section 5.2) + certify-first incremental gate + three-phase solve
+    + exact feasibility repair."""
     global _N_TRACES
     _N_TRACES += 1  # executes at trace time only (side effect outside jnp ops)
     r = _shape_requests(r, active, fleet.l, fleet.u)
@@ -104,7 +108,11 @@ def _engine_solve(fleet, r, priority, active, warm, iter_budget, *, meta, opts):
         sla=fleet.sla,
         weight_scale=fleet.weight_scale,
     )
-    return solve_three_phase(ap, meta, opts, warm, iter_budget)
+    x1, x2, x3, sol, stats = solve_three_phase(ap, meta, opts, warm, iter_budget, carry)
+    new_carry = certify.update_carry(
+        carry, ap, x1, x3, stats["skipped"], stats["certify_pass"] & ~stats["skipped"]
+    )
+    return x1, x2, x3, sol, stats, new_carry
 
 
 # One compiled executable per (shapes, meta, opts): engines over the same
@@ -174,6 +182,8 @@ class AllocEngine:
             run_phase2=self.options.run_phase2,
             run_phase3=self.options.run_phase3,
             eps=self.options.eps,
+            certify_tol=self.options.certify_tol,
+            certify_margin=self.options.certify_margin,
         )
         # construction-time caps: rescale_supply scales are absolute vs these
         self._node_cap0 = np.asarray(pdn.node_cap, np.float64).copy()
@@ -184,6 +194,10 @@ class AllocEngine:
         self._subtree_lmin = pdn.subtree_min_power()
         self._warm: phases.WarmCarry | None = None
         self._batched_warm: dict[int, Any] = {}
+        # incremental (certify-first) anchors, carried only when
+        # options.incremental — see repro.core.solver.certify
+        self._inc_carry: Any = None
+        self._inc_batched_carry: dict[int, Any] = {}
         self._cost_model: PhaseCostModel | None = None
         self.history: list[dict[str, Any]] = []
 
@@ -198,6 +212,8 @@ class AllocEngine:
         """Drop carried solver state (next step/step_batched cold-starts)."""
         self._warm = None
         self._batched_warm.clear()
+        self._inc_carry = None
+        self._inc_batched_carry.clear()
 
     # -- in-place topology re-pin (no recompile) ---------------------------
 
@@ -373,6 +389,7 @@ class AllocEngine:
                     jnp.asarray(act),
                     None,
                     jnp.asarray(budget, jnp.int32),
+                    None,
                 )
                 out = _engine_step_jit(
                     *args, meta=self.meta, opts=self.options.solver
@@ -411,26 +428,32 @@ class AllocEngine:
         with self._ctx():
             # None (cold) and carry (steady) are two jit variants; the cold
             # one must stay warm=None so its phase chaining is bit-identical
-            # to the host driver's cold path.
-            x1, x2, x3, solver, stats = _engine_step_jit(
+            # to the host driver's cold path.  The incremental anchor is a
+            # third traced input: skip/solve transitions share one program.
+            inc = self._inc_carry if self.options.incremental else None
+            x1, x2, x3, solver, stats, new_carry = _engine_step_jit(
                 self.fleet,
                 jnp.asarray(req, self.dtype),
                 self.priority,
                 jnp.asarray(act),
                 self._warm,
                 None if budget is None else jnp.asarray(budget, jnp.int32),
+                inc,
                 meta=self.meta,
                 opts=self.options.solver,
             )
             x3 = x3.block_until_ready()
         wall = time.perf_counter() - t0
         self._warm = solver
+        if self.options.incremental:
+            self._inc_carry = new_carry
         res = AllocResult(
             allocation=np.asarray(x3),
             phase1=np.asarray(x1),
             phase2=np.asarray(x2),
             warm_state=solver,
             wall_time_s=wall,
+            carry=new_carry if self.options.incremental else None,
             stats={
                 "total_solves": int(stats["solves"]),
                 "total_iterations": int(stats["iterations"]),
@@ -440,6 +463,8 @@ class AllocEngine:
                 "converged": bool(stats["converged"]),
                 "kkt_certified": bool(stats["kkt_certified"]),
                 "truncated": bool(stats["truncated"]),
+                "skipped": bool(stats["skipped"]),
+                "certify_pass": bool(stats["certify_pass"]),
                 "iter_budget": budget,
             },
         )
@@ -451,6 +476,7 @@ class AllocEngine:
                 "iterations": res.stats["total_iterations"],
                 "phase_iterations": res.stats["phase_iterations"],
                 "truncated": res.stats["truncated"],
+                "skipped": res.stats["skipped"],
             }
         )
         return res
@@ -509,7 +535,14 @@ class AllocEngine:
                 self.options,
                 warm=self._batched_warm.get(K) if carry_warm else None,
                 meta=self.meta,
+                carry=(
+                    self._inc_batched_carry.get(K)
+                    if self.options.incremental and carry_warm
+                    else None
+                ),
             )
         if carry_warm:
             self._batched_warm[K] = res.warm_state
+            if self.options.incremental:
+                self._inc_batched_carry[K] = res.carry
         return res

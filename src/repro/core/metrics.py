@@ -26,7 +26,9 @@ def satisfaction_ratio(requests: np.ndarray, alloc: np.ndarray) -> float:
     return useful_utilization(requests, alloc) / tot
 
 
-def relative_improvement(requests: np.ndarray, alloc: np.ndarray, baseline: np.ndarray) -> float:
+def relative_improvement(
+    requests: np.ndarray, alloc: np.ndarray, baseline: np.ndarray
+) -> float:
     """Delta-U vs a baseline allocation, in percent of the baseline."""
     ub = useful_utilization(requests, baseline)
     if ub <= 0:

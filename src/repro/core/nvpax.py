@@ -50,6 +50,15 @@ class NvpaxOptions:
     # per-iteration cost and truncate at saturation-round granularity with
     # the same stats["truncated"] reporting.
     deadline_s: float | None = None
+    # Incremental re-solve (PR 7): certify the carried solution against the
+    # new step before solving (see repro.core.solver.certify).  When enabled,
+    # callers thread ``AllocResult.carry`` back in and get
+    # stats["skipped"]/stats["certify_pass"] on every path.  ``certify_tol``
+    # is the "unchanged" comparison tolerance in watts; ``certify_margin`` is
+    # the slack margin below which a demand/cap move forces a full solve.
+    incremental: bool = False
+    certify_tol: float = 1e-9
+    certify_margin: float = 1e-2
 
 
 @dataclass
@@ -60,12 +69,16 @@ class AllocResult:
     warm_state: Any  # phases.WarmCarry for the next control step
     wall_time_s: float
     stats: dict[str, Any]
+    # incremental-mode anchor for the next step's certify pass (None unless
+    # options.incremental; see repro.core.solver.certify.IncrementalCarry)
+    carry: Any = None
 
 
 def optimize(
     ap: AllocProblem,
     options: NvpaxOptions = NvpaxOptions(),
     warm: phases.WarmCarry | None = None,
+    carry: Any = None,
 ) -> AllocResult:
     """Run Algorithm 3 on one control step's problem.
 
@@ -73,6 +86,12 @@ def optimize(
     by the previous control step (see :class:`repro.core.phases.WarmCarry`);
     it is an optimization, not a correctness dependency — warm and cold
     steps agree to solver tolerance.
+
+    ``carry`` (with ``options.incremental``) is the previous step's
+    :class:`~repro.core.solver.certify.IncrementalCarry` anchor: the carried
+    solution is certified against the new step first, and on success the
+    solve is skipped entirely (``stats["skipped"]``) or restarted after
+    Phase I (``stats["certify_pass"]``) — see ``repro.core.solver.certify``.
     """
     ctx = enable_x64(True) if options.x64 else contextlib.nullcontext()
     t0 = time.perf_counter()
@@ -85,9 +104,57 @@ def optimize(
 
     truncated = False
     with ctx:
-        x1, state, s1 = phases.phase1(
-            ap, options.solver, options.eps, warm.p1 if warm else None
-        )
+        skipped = p1_reused = False
+        if options.incremental and carry is not None:
+            dec = solver_mod.certify_step(
+                ap,
+                carry,
+                ap.n_tree_depths(),
+                tol=options.certify_tol,
+                margin=options.certify_margin,
+                opts=options.solver,
+            )
+            skipped = bool(dec.skip)
+            p1_reused = bool(dec.skip_p1)
+        if skipped:
+            x3 = dec.x_snap.block_until_ready()
+            zero = phases.PhaseStats(0, 0, True, 0.0)
+            return AllocResult(
+                allocation=np.asarray(x3),
+                phase1=np.asarray(carry.x1),
+                phase2=np.asarray(x3),
+                warm_state=warm,
+                wall_time_s=time.perf_counter() - t0,
+                stats={
+                    "phase1": zero._asdict(),
+                    "phase2": zero._asdict(),
+                    "phase3": zero._asdict(),
+                    "total_solves": 0,
+                    "total_iterations": 0,
+                    "phase_iterations": [0, 0, 0],
+                    "converged": True,
+                    "kkt_certified": True,
+                    "truncated": False,
+                    "skipped": True,
+                    "certify_pass": True,
+                },
+                carry=carry,
+            )
+        if p1_reused:
+            x1 = jnp.asarray(carry.x1)
+            s1 = phases.PhaseStats(0, 0, True, 0.0)
+            w1 = (
+                warm.p1
+                if warm
+                else solver_mod.SolverState.zeros(
+                    ap.n, ap.tree.m, ap.sla.k, ap.l.dtype
+                )
+            )
+            state = w1._replace(x=x1)
+        else:
+            x1, state, s1 = phases.phase1(
+                ap, options.solver, options.eps, warm.p1 if warm else None
+            )
         carry1 = state
         x2 = x1
         s2 = phases.PhaseStats(0, 0, True, 0.0)
@@ -113,6 +180,19 @@ def optimize(
             truncated = True
         carry3 = state
         x3 = x3.block_until_ready()
+        new_carry = None
+        if options.incremental:
+            if p1_reused:
+                new_carry = carry._replace(
+                    x=jnp.asarray(x3),
+                    cap=ap.tree.cap,
+                    sla_lo=ap.sla.lo,
+                    sla_hi=ap.sla.hi,
+                )
+            else:
+                new_carry = solver_mod.make_carry(
+                    ap, jnp.asarray(x1), jnp.asarray(x3)
+                )
     wall = time.perf_counter() - t0
     return AllocResult(
         allocation=np.asarray(x3),
@@ -126,10 +206,14 @@ def optimize(
             "phase3": s3._asdict(),
             "total_solves": s1.solves + s2.solves + s3.solves,
             "total_iterations": s1.iterations + s2.iterations + s3.iterations,
+            "phase_iterations": [s1.iterations, s2.iterations, s3.iterations],
             "converged": s1.converged and s2.converged and s3.converged,
             "kkt_certified": s1.kkt_certified
             and s2.kkt_certified
             and s3.kkt_certified,
             "truncated": truncated,
+            "skipped": False,
+            "certify_pass": p1_reused,
         },
+        carry=new_carry,
     )

@@ -135,7 +135,9 @@ def repair(
         sums = tree_matvec(x, ap.tree)
         over = level & (sums > ap.tree.cap)
         denom = jnp.maximum(sums - lmin_node, 1e-30)
-        fac_node = jnp.where(over, jnp.maximum(ap.tree.cap - lmin_node, 0.0) / denom, 1.0)
+        fac_node = jnp.where(
+            over, jnp.maximum(ap.tree.cap - lmin_node, 0.0) / denom, 1.0
+        )
         # broadcast factors onto (disjoint) ranges via a difference array
         diff = jnp.zeros((x.shape[0] + 1,), x.dtype)
         diff = diff.at[ap.tree.start].add(fac_node - 1.0)
@@ -355,7 +357,9 @@ def run_maxmin_phase(
             break
         mask_f = ~(mask_a | free_set)
         prob = lp_step(ap, x, mask_a, mask_f, free_set, eps)
-        state = solver.SolverState(x, jnp.zeros((), dtype), state.y_tree, state.y_sla, state.y_imp)
+        state = solver.SolverState(
+            x, jnp.zeros((), dtype), state.y_tree, state.y_sla, state.y_imp
+        )
         state, stats = solver.solve(prob, ap.tree, ap.sla, state, opts)
         # The exact max-min iteration never moves a non-free device below
         # its round-entry value (improvement rows force x >= base + t,

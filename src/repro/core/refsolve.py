@@ -27,7 +27,9 @@ except ImportError:  # pragma: no cover
     HAVE_SCIPY = False
 
 
-def dense_constraints(tree: TreeTopo, sla: SlaTopo, n: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+def dense_constraints(
+    tree: TreeTopo, sla: SlaTopo, n: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Dense K over z = (x, t) plus row bounds (lo, hi)."""
     start = np.asarray(tree.start)
     end = np.asarray(tree.end)

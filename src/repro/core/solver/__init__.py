@@ -33,6 +33,13 @@ re-exports it for backward compatibility):
   vmap-safe.
 """
 
+from repro.core.solver.certify import (
+    CertifyDecision,
+    IncrementalCarry,
+    certify_step,
+    make_carry,
+    update_carry,
+)
 from repro.core.solver.loop import solve
 from repro.core.solver.options import SolveStats, SolverOptions, SolverState
 from repro.core.solver.scaling import (
@@ -53,6 +60,11 @@ __all__ = [
     "kkt_residuals",
     "primal_residual",
     "polish_t",
+    "IncrementalCarry",
+    "CertifyDecision",
+    "certify_step",
+    "make_carry",
+    "update_carry",
     "Scales",
     "StepSizes",
     "make_scales",

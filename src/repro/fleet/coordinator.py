@@ -322,6 +322,42 @@ class BudgetCoordinator:
         grants = self._grants(demand, dmin + lift, dcap, ccap, dn)
         return grants, slice_lo, slice_hi
 
+    def domain_dirtiness(
+        self,
+        demand: np.ndarray,
+        grants: np.ndarray,
+        prev_demand: np.ndarray | None,
+        prev_grants: np.ndarray | None,
+        *,
+        tol: float = 1e-9,
+    ) -> np.ndarray:
+        """[K] bool: which domains must re-enter the solver this step.
+
+        A domain is *clean* — its frozen allocation can be served without a
+        solve — only when both its aggregate demand and its budget grant are
+        within ``tol`` watts of the anchor step that allocation was solved
+        against; with no anchor yet every domain is dirty.  Aggregate
+        equality alone cannot prove per-device equality, so the orchestrator
+        layers per-device telemetry and SLA-bound checks on top (see
+        ``FleetOrchestrator._step_loop``); this helper owns the
+        coordinator-visible half of the dirtiness decision.
+        """
+        demand = np.asarray(demand, np.float64)
+        grants = np.asarray(grants, np.float64)
+        if demand.shape != (self.k,):
+            raise ValueError(f"demand shape {demand.shape} != ({self.k},)")
+        if prev_demand is None or prev_grants is None:
+            return np.ones(self.k, bool)
+        prev_demand = np.asarray(prev_demand, np.float64)
+        prev_grants = np.asarray(prev_grants, np.float64)
+        return (
+            (np.abs(demand - prev_demand) > tol)
+            | (np.abs(grants - prev_grants) > tol)
+            # NaN anchors (domains never solved) compare False above
+            | np.isnan(prev_demand)
+            | np.isnan(prev_grants)
+        )
+
     def check(
         self, grants: np.ndarray, coord_cap: np.ndarray | None = None, tol: float = 1e-6
     ) -> None:

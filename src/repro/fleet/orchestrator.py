@@ -59,7 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compat import enable_x64
-from repro.core import phases
+from repro.core import phases, solver
 from repro.core.batched import BatchMeta, solve_three_phase
 from repro.core.engine import AllocEngine, _shape_requests
 from repro.core.nvpax import NvpaxOptions
@@ -106,34 +106,29 @@ class _DomainBatch(NamedTuple):
     sla_ten: jnp.ndarray  # [K, E] int32
 
 
-def _solve_domains(dom, cap, sla_lo, sla_hi, r, active, warm, *, meta, opts):
+def _solve_domains(dom, cap, sla_lo, sla_hi, r, active, warm, carry=None, *, meta, opts):
     """The vmapped per-domain three-phase solve over [K, ...] arrays.
 
     Shared body of the stacked dispatch (:func:`_fleet_solve`) and the
     sharded dispatch (:mod:`repro.fleet.sharded`, where K is the per-shard
     domain count) so both modes trace the identical per-domain program.
+
+    ``carry`` (incremental mode, with ``[K, ...]`` leaves) threads each
+    domain's :class:`repro.core.solver.certify.IncrementalCarry` anchor
+    into the per-domain solve: dirty domains iterate, clean domains are
+    frozen by the while-loop batching rule, and when *every* domain in the
+    batch certifies a full skip a scalar ``lax.cond`` short-circuits the
+    whole vmapped solve to the O(matvec) assembly below.  In the sharded
+    dispatch each shard takes that branch independently (no collectives on
+    either side of the cond).  Returns ``(x1, x2, x3, warm_carry, stats,
+    new_carry)``.
     """
 
-    def one(
-        l,
-        u,
-        ws,
-        pri,
-        start,
-        end,
-        depth,
-        sdev,
-        sten,
-        cap_k,
-        slo_k,
-        shi_k,
-        r_k,
-        act_k,
-        warm_k,
-    ):
+    def build_problem(l, u, ws, pri, start, end, depth, sdev, sten,
+                      cap_k, slo_k, shi_k, r_k, act_k):
         tree = TreeTopo(start=start, end=end, cap=cap_k, depth=depth)
         sla = SlaTopo(dev=sdev, ten=sten, lo=slo_k, hi=shi_k)
-        ap = AllocProblem(
+        return AllocProblem(
             l=l,
             u=u,
             r=_shape_requests(r_k, act_k, l, u),
@@ -143,10 +138,24 @@ def _solve_domains(dom, cap, sla_lo, sla_hi, r, active, warm, *, meta, opts):
             sla=sla,
             weight_scale=ws,
         )
-        return solve_three_phase(ap, meta, opts, warm_k, None)
 
-    warm_axes = None if warm is None else 0
-    return jax.vmap(one, in_axes=(0,) * 14 + (warm_axes,))(
+    def one(*args):
+        warm_k, carry_k = args[-2], args[-1]
+        ap = build_problem(*args[:-2])
+        x1, x2, x3, wc, stats = solve_three_phase(
+            ap, meta, opts, warm_k, None, carry_k
+        )
+        new_carry = solver.update_carry(
+            carry_k,
+            ap,
+            x1,
+            x3,
+            stats["skipped"],
+            stats["certify_pass"] & ~stats["skipped"],
+        )
+        return x1, x2, x3, wc, stats, new_carry
+
+    dom_leaves = (
         dom.l,
         dom.u,
         dom.weight_scale,
@@ -161,16 +170,68 @@ def _solve_domains(dom, cap, sla_lo, sla_hi, r, active, warm, *, meta, opts):
         sla_hi,
         r,
         active,
-        warm,
     )
+    warm_axes = None if warm is None else 0
+
+    def run_vmapped(c):
+        return jax.vmap(one, in_axes=(0,) * 14 + (warm_axes, None if c is None else 0))(
+            *dom_leaves, warm, c
+        )
+
+    if carry is None or warm is None:
+        # no anchor yet (or no warm state to thread through the all-skip
+        # assembly): per-lane gating alone
+        return run_vmapped(carry)
+
+    def cert_one(*args):
+        ap = build_problem(*args[:-1])
+        return solver.certify_step(
+            ap,
+            args[-1],
+            meta.n_depths,
+            tol=meta.certify_tol,
+            margin=meta.certify_margin,
+            opts=opts,
+        )
+
+    dec = jax.vmap(cert_one, in_axes=(0,) * 14 + (0,))(*dom_leaves, carry)
+    kk = dom.l.shape[0]
+
+    def fast(_):
+        # every domain certified: assemble the exact all-skip outputs the
+        # vmapped program would produce, without running it
+        p1_sol = warm.p1._replace(x=carry.x1)
+        w2 = phases.merge_warm(p1_sol, warm.p2)
+        w3 = phases.merge_warm(w2, warm.p3)
+        zi = jnp.zeros((kk,), jnp.int32)
+        yes = jnp.ones((kk,), bool)
+        stats = {
+            "solves": zi,
+            "iterations": zi,
+            "iterations_p1": zi,
+            "iterations_p2": zi,
+            "iterations_p3": zi,
+            "converged": yes,
+            "kkt_certified": yes,
+            "truncated": jnp.zeros((kk,), bool),
+            "skipped": dec.skip,
+            "certify_pass": dec.skip | dec.skip_p1,
+        }
+        wcarry = phases.WarmCarry(p1_sol, w2, w3)
+        return carry.x1, dec.x_snap, dec.x_snap, wcarry, stats, carry
+
+    def slow(_):
+        return run_vmapped(carry)
+
+    return jax.lax.cond(jnp.all(dec.skip), fast, slow, None)
 
 
-def _fleet_solve(dom, cap, sla_lo, sla_hi, r, active, warm, *, meta, opts):
+def _fleet_solve(dom, cap, sla_lo, sla_hi, r, active, warm, carry=None, *, meta, opts):
     """All K domain control steps as one traced program."""
     global _N_TRACES
     _N_TRACES += 1  # executes at trace time only
     return _solve_domains(
-        dom, cap, sla_lo, sla_hi, r, active, warm, meta=meta, opts=opts
+        dom, cap, sla_lo, sla_hi, r, active, warm, carry, meta=meta, opts=opts
     )
 
 
@@ -273,6 +334,12 @@ class FleetOrchestrator:
             self._mesh = _sharded.build_mesh(K)
         self._engines: list[AllocEngine] | None = None
         self._warm: phases.WarmCarry | None = None
+        # incremental mode (options.incremental): stacked/sharded keep a
+        # batched certify anchor ([K, ...] leaves); loop mode keeps the host
+        # anchor of the dirty-domain dispatch (frozen per-domain allocations
+        # plus the demand/grant/telemetry values they were solved against)
+        self._inc_carry: Any = None
+        self._loop_prev: dict[str, Any] | None = None
         self.history: list[dict[str, Any]] = []
         if self._sla is not None:
             # fail fast: contracts must be deliverable and fundable under
@@ -590,6 +657,20 @@ class FleetOrchestrator:
                 self._warm = jax.tree_util.tree_map(
                     lambda a: a.at[k].set(jnp.zeros_like(a[k])), self._warm
                 )
+        self._invalidate_incremental(k)
+
+    def _invalidate_incremental(self, k: int) -> None:
+        """Poison domain ``k``'s incremental anchor after a re-pin/rebuild:
+        an infinite anchor demand fails every certify tier, forcing a full
+        solve for that domain on the next step (the other K-1 anchors keep
+        skipping)."""
+        if self._inc_carry is not None:
+            with self._ctx():
+                self._inc_carry = self._inc_carry._replace(
+                    r=self._inc_carry.r.at[k].set(jnp.inf)
+                )
+        if self._loop_prev is not None:
+            self._loop_prev["alloc"][k] = None
 
     # -- lifecycle: supply + churn re-pins ---------------------------------
 
@@ -727,6 +808,7 @@ class FleetOrchestrator:
                 node_cap=new_cap,
                 reset_warm=reset_warm,
             )
+            self._invalidate_incremental(k)
         else:
             # update only row k (O(N) host work + one-row transfers); the
             # full K-domain rebuild is reserved for structural rebuilds
@@ -744,6 +826,11 @@ class FleetOrchestrator:
                 self._cap_np[k, : p.m] = self._node_cap[k]
             if reset_warm:
                 self._reset_domain_warm(k)
+        if not reset_warm:
+            # the certify anchors compare boxes/caps and would catch the
+            # re-pin anyway; poisoning keeps the frozen-allocation paths
+            # trivially sound without relying on that comparison
+            self._invalidate_incremental(k)
 
     def rebuild_domain(
         self,
@@ -830,12 +917,15 @@ class FleetOrchestrator:
         if self.mode == "loop":
             assert self._engines is not None
             self._engines[k] = self._build_engine(k, new_pdn)
+            self._invalidate_incremental(k)
         else:
             self._upload()
             self._reset_domain_warm(k)
 
     def reset_warm(self) -> None:
         self._warm = None
+        self._inc_carry = None
+        self._loop_prev = None
         if self._engines is not None:
             for e in self._engines:
                 e.reset_warm()
@@ -925,7 +1015,7 @@ class FleetOrchestrator:
             if self.mode == "stacked":
                 res = self._step_stacked(req, active, grants, offs, row_bounds)
             else:
-                res = self._step_loop(req, active, grants, offs, row_bounds)
+                res = self._step_loop(req, active, grants, offs, row_bounds, demand)
             wall = time.perf_counter() - t0
         if slice_lo is not None:
             res[1]["slice_lo"] = slice_lo
@@ -945,6 +1035,7 @@ class FleetOrchestrator:
                 "iterations": int(np.sum(out.stats["iterations"])),
                 "granted_W": float(grants.sum()),
                 "demand_W": float(demand.sum()),
+                "skipped": int(np.sum(out.stats.get("skipped", False))),
             }
         )
         return out
@@ -967,8 +1058,9 @@ class FleetOrchestrator:
             for k, (lo_k, hi_k) in enumerate(row_bounds):
                 sla_lo[k, : lo_k.shape[0]] = lo_k
                 sla_hi[k, : hi_k.shape[0]] = hi_k
+        inc = self._inc_carry if self.options.incremental else None
         with self._ctx():
-            x1, x2, x3, carry, stats = _fleet_step_jit(
+            x1, x2, x3, warm_c, stats, new_inc = _fleet_step_jit(
                 self._dom,
                 jnp.asarray(cap, self.dtype),
                 jnp.asarray(sla_lo, self.dtype),
@@ -976,13 +1068,21 @@ class FleetOrchestrator:
                 jnp.asarray(r, self.dtype),
                 jnp.asarray(act),
                 self._warm,
+                inc,
                 meta=self.meta,
                 opts=self.options.solver,
             )
             x3 = np.asarray(x3.block_until_ready())
-        self._warm = carry
+        self._warm = warm_c
+        if self.options.incremental:
+            # update_carry(None, ...) seeds a fresh anchor on the first
+            # step, so new_inc is a [K, ...]-leaf carry on every path
+            self._inc_carry = new_inc
         alloc = np.concatenate([x3[k, : int(self.domain_sizes[k])] for k in range(K)])
-        return alloc, {
+        return alloc, self._batched_stats(stats, "stacked")
+
+    def _batched_stats(self, stats, mode: str) -> dict[str, Any]:
+        out = {
             "solves": np.asarray(stats["solves"]),
             "iterations": np.asarray(stats["iterations"]),
             "iterations_per_phase": np.stack(
@@ -990,8 +1090,12 @@ class FleetOrchestrator:
                 axis=-1,
             ),
             "converged": np.asarray(stats["converged"]),
-            "mode": "stacked",
+            "skipped": np.asarray(stats["skipped"]),
+            "certify_pass": np.asarray(stats["certify_pass"]),
+            "mode": mode,
         }
+        out["phase_iterations"] = out["iterations_per_phase"]
+        return out
 
     def _sharded_plan(self):
         """(PlanRep, RowMaps | None): demand-independent planning arrays for
@@ -1079,15 +1183,17 @@ class FleetOrchestrator:
             nk = int(self.domain_sizes[k])
             r[k, :nk] = req[offs[k] : offs[k + 1]]
             act[k, :nk] = active[offs[k] : offs[k + 1]]
+        inc = self._inc_carry if self.options.incremental else None
         with self._ctx():
             rep, rowmap = self._sharded_plan()
-            x3, carry, stats, grants, demand, slo, shi = shd.step(
+            x3, warm_c, stats, new_inc, grants, demand, slo, shi = shd.step(
                 self._dom,
                 jnp.asarray(self._cap_np, self.dtype),
                 jnp.asarray(r, self.dtype),
                 jnp.asarray(act),
                 rowmap,
                 self._warm,
+                inc,
                 rep,
                 mesh=self._mesh,
                 meta=self.meta,
@@ -1095,22 +1201,15 @@ class FleetOrchestrator:
                 coord_mode=self.coordinator.mode,
             )
             x3 = np.asarray(x3.block_until_ready())
-        self._warm = carry
+        self._warm = warm_c
+        if self.options.incremental:
+            self._inc_carry = new_inc
         alloc = np.concatenate([x3[k, : int(self.domain_sizes[k])] for k in range(K)])
         has_slices = self._sla is not None and self._sla.n_slices > 0
         return (
             (
                 alloc,
-                {
-                    "solves": np.asarray(stats["solves"]),
-                    "iterations": np.asarray(stats["iterations"]),
-                    "iterations_per_phase": np.stack(
-                        [np.asarray(stats[f"iterations_p{i}"]) for i in (1, 2, 3)],
-                        axis=-1,
-                    ),
-                    "converged": np.asarray(stats["converged"]),
-                    "mode": "sharded",
-                },
+                self._batched_stats(stats, "sharded"),
             ),
             np.asarray(grants),
             np.asarray(demand),
@@ -1118,27 +1217,111 @@ class FleetOrchestrator:
             np.asarray(shi) if has_slices else None,
         )
 
-    def _step_loop(self, req, active, grants, offs, row_bounds=None):
+    def _loop_domain_clean(self, k, prev, rk, ak, grant_k, rb_k, tol) -> bool:
+        """Host-level dirtiness of one loop-mode domain: clean only when the
+        per-device telemetry, activity mask, budget grant and SLA row bounds
+        are all within ``tol`` of the anchor step whose frozen allocation we
+        would serve.  Comparisons are against the *anchor* (not last step),
+        so tol-sized drift cannot creep across a chain of skips."""
+        if prev["alloc"][k] is None:
+            return False
+        if abs(float(grant_k) - float(prev["grants"][k])) > tol:
+            return False
+        if not np.array_equal(ak, prev["active"][k]):
+            return False
+        if float(np.max(np.abs(rk - prev["req"][k]), initial=0.0)) > tol:
+            return False
+        prev_rb = prev["row_bounds"][k]
+        if (rb_k is None) != (prev_rb is None):
+            return False
+        if rb_k is not None and not (
+            np.allclose(rb_k[0], prev_rb[0], rtol=0.0, atol=tol)
+            and np.allclose(rb_k[1], prev_rb[1], rtol=0.0, atol=tol, equal_nan=False)
+        ):
+            return False
+        return True
+
+    def _step_loop(self, req, active, grants, offs, row_bounds=None, demand=None):
         assert self._engines is not None
-        allocs, solves, iters, phase_iters, conv = [], [], [], [], []
-        for k, eng in enumerate(self._engines):
-            eng.set_root_cap(grants[k])  # traced cap swap: no recompile
-            if row_bounds is not None and row_bounds[k][0].shape[0]:
-                # traced SLA-bound swap: tenant sub-budgets, no recompile
-                eng.set_sla_bounds(row_bounds[k][0], row_bounds[k][1])
-            res = eng.step(
-                req[offs[k] : offs[k + 1]],
-                active=active[offs[k] : offs[k + 1]],
+        inc = self.options.incremental
+        tol = self.options.certify_tol
+        if inc and self._loop_prev is None:
+            K = self.k
+            self._loop_prev = {
+                "alloc": [None] * K,
+                "req": [None] * K,
+                "active": [None] * K,
+                "demand": np.full(K, np.nan),
+                "grants": np.full(K, np.nan),
+                "row_bounds": [None] * K,
+            }
+        prev = self._loop_prev
+        dirty = (
+            self.coordinator.domain_dirtiness(
+                demand,
+                grants,
+                prev["demand"],
+                prev["grants"],
+                tol=tol,
             )
+            if inc and demand is not None
+            else np.ones(self.k, bool)
+        )
+        allocs, solves, iters, phase_iters, conv = [], [], [], [], []
+        skipped, certify = [], []
+        for k, eng in enumerate(self._engines):
+            rk = req[offs[k] : offs[k + 1]]
+            ak = active[offs[k] : offs[k + 1]]
+            rb_k = (
+                row_bounds[k]
+                if row_bounds is not None and row_bounds[k][0].shape[0]
+                else None
+            )
+            if (
+                inc
+                and not dirty[k]
+                and self._loop_domain_clean(k, prev, rk, ak, grants[k], rb_k, tol)
+            ):
+                # clean domain: serve the frozen allocation, skip the engine
+                # dispatch entirely (the anchor values stay frozen too)
+                allocs.append(prev["alloc"][k])
+                solves.append(0)
+                iters.append(0)
+                phase_iters.append([0, 0, 0])
+                conv.append(True)
+                skipped.append(True)
+                certify.append(True)
+                continue
+            eng.set_root_cap(grants[k])  # traced cap swap: no recompile
+            if rb_k is not None:
+                # traced SLA-bound swap: tenant sub-budgets, no recompile
+                eng.set_sla_bounds(rb_k[0], rb_k[1])
+            res = eng.step(rk, active=ak)
             allocs.append(res.allocation)
             solves.append(res.stats["total_solves"])
             iters.append(res.stats["total_iterations"])
             phase_iters.append(res.stats["phase_iterations"])
             conv.append(res.stats["converged"])
-        return np.concatenate(allocs), {
+            skipped.append(bool(res.stats.get("skipped", False)))
+            certify.append(bool(res.stats.get("certify_pass", False)))
+            if inc:
+                prev["alloc"][k] = res.allocation
+                prev["req"][k] = rk.copy()
+                prev["active"][k] = ak.copy()
+                if demand is not None:
+                    prev["demand"][k] = float(demand[k])
+                prev["grants"][k] = float(grants[k])
+                prev["row_bounds"][k] = (
+                    (rb_k[0].copy(), rb_k[1].copy()) if rb_k is not None else None
+                )
+        stats = {
             "solves": np.asarray(solves),
             "iterations": np.asarray(iters),
             "iterations_per_phase": np.asarray(phase_iters),
             "converged": np.asarray(conv),
+            "skipped": np.asarray(skipped),
+            "certify_pass": np.asarray(certify),
             "mode": "loop",
         }
+        stats["phase_iterations"] = stats["iterations_per_phase"]
+        return np.concatenate(allocs), stats

@@ -117,7 +117,7 @@ class PlanRep(NamedTuple):
 
 
 def _sharded_solve(
-    dom, cap, r, active, rowmap, warm, rep, *, meta, opts, coord_mode, k_total
+    dom, cap, r, active, rowmap, warm, carry, rep, *, meta, opts, coord_mode, k_total
 ):
     """Per-shard body: local aggregates -> one psum -> replicated
     coordinator plan -> local feeds -> the vmapped per-domain solve."""
@@ -197,14 +197,18 @@ def _sharded_solve(
     grants_loc = lax.dynamic_slice_in_dim(grants, idx * k_loc, k_loc)
     cap_step = cap.at[:, 0].set(grants_loc)
 
-    _, _, x3, carry, stats = _solve_domains(
-        dom, cap_step, sla_lo, sla_hi, r, active, warm, meta=meta, opts=opts
+    _, _, x3, wcarry, stats, new_inc = _solve_domains(
+        dom, cap_step, sla_lo, sla_hi, r, active, warm, carry, meta=meta, opts=opts
     )
-    return x3, carry, stats, grants, demand, rep.slice_lo, slice_hi_out
+    # per-shard incremental dispatch: each shard's all-skip cond branches
+    # independently inside _solve_domains (no collectives on either side)
+    return x3, wcarry, stats, new_inc, grants, demand, rep.slice_lo, slice_hi_out
 
 
 @functools.partial(jax.jit, static_argnames=("mesh", "meta", "opts", "coord_mode"))
-def _step_jit(dom, cap, r, active, rowmap, warm, rep, *, mesh, meta, opts, coord_mode):
+def _step_jit(
+    dom, cap, r, active, rowmap, warm, carry, rep, *, mesh, meta, opts, coord_mode
+):
     body = functools.partial(
         _sharded_solve,
         meta=meta,
@@ -216,16 +220,35 @@ def _step_jit(dom, cap, r, active, rowmap, warm, rep, *, mesh, meta, opts, coord
     fn = compat.shard_map(
         body,
         mesh,
-        in_specs=(sharded, sharded, sharded, sharded, sharded, sharded, rep_spec),
-        out_specs=(sharded, sharded, sharded, rep_spec, rep_spec, rep_spec, rep_spec),
+        in_specs=(
+            sharded,
+            sharded,
+            sharded,
+            sharded,
+            sharded,
+            sharded,
+            sharded,
+            rep_spec,
+        ),
+        out_specs=(
+            sharded,
+            sharded,
+            sharded,
+            sharded,
+            rep_spec,
+            rep_spec,
+            rep_spec,
+            rep_spec,
+        ),
     )
-    return fn(dom, cap, r, active, rowmap, warm, rep)
+    return fn(dom, cap, r, active, rowmap, warm, carry, rep)
 
 
-def step(dom, cap, r, active, rowmap, warm, rep, *, mesh, meta, opts, coord_mode):
+def step(dom, cap, r, active, rowmap, warm, carry, rep, *, mesh, meta, opts, coord_mode):
     """One sharded fleet control step.  All array arguments are traced (the
     zero-recompile contract); ``meta``/``opts``/``coord_mode``/``mesh`` are
-    the only statics."""
+    the only statics.  ``carry`` is the incremental certify anchor with
+    domain-sharded ``[K, ...]`` leaves (None outside incremental mode)."""
     if coord_mode not in ("waterfill", "subtree"):
         raise ValueError(
             f"sharded dispatch supports waterfill/subtree coordinators, "
@@ -238,6 +261,7 @@ def step(dom, cap, r, active, rowmap, warm, rep, *, mesh, meta, opts, coord_mode
         active,
         rowmap,
         warm,
+        carry,
         rep,
         mesh=mesh,
         meta=meta,
