@@ -35,6 +35,7 @@ import numpy as np
 from repro.core.engine import AllocEngine, trace_count
 from repro.core.nvpax import NvpaxOptions
 from repro.core.solver import SolverOptions
+from repro.obs import spans
 from repro.pdn.telemetry import TelemetrySim, TraceConfig
 from repro.pdn.tree import build_from_level_sizes
 
@@ -74,9 +75,7 @@ def make_trace(kind: str, n: int, steps: int, seed: int) -> list[np.ndarray]:
         reported = sim.power(0)
         for t in range(steps):
             raw = sim.power(t)
-            reported = np.where(
-                np.abs(raw - reported) > DEADBAND_W, raw, reported
-            )
+            reported = np.where(np.abs(raw - reported) > DEADBAND_W, raw, reported)
             out.append(reported.copy())
         return out
     if kind == "churn":
@@ -94,15 +93,16 @@ def bench_trace(
     # the cold solution by ~1e-4 W once; parity re-syncs at the first
     # refresh, so the measured window starts after it)
     level_sizes, gpus = GEOMETRIES[n]
-    pdn = build_from_level_sizes(list(level_sizes), gpus_per_server=gpus)
-    assert pdn.n == n, (pdn.n, n)
-    tele = make_trace(kind, n, steps + warmup, seed)
+    with spans.span("setup"):
+        pdn = build_from_level_sizes(list(level_sizes), gpus_per_server=gpus)
+        assert pdn.n == n, (pdn.n, n)
+        tele = make_trace(kind, n, steps + warmup, seed)
 
-    full = AllocEngine(pdn, options=NvpaxOptions(solver=TIGHT))
-    inc = AllocEngine(pdn, options=NvpaxOptions(incremental=True, solver=TIGHT))
-    for t in range(warmup):  # compiles cold + steady variants of both
-        full.step(tele[t])
-        inc.step(tele[t])
+        full = AllocEngine(pdn, options=NvpaxOptions(solver=TIGHT))
+        inc = AllocEngine(pdn, options=NvpaxOptions(incremental=True, solver=TIGHT))
+        for t in range(warmup):  # compiles cold + steady variants of both
+            full.step(tele[t])
+            inc.step(tele[t])
 
     traces_before = trace_count()
     full_ms, inc_ms, parity, skipped, certified, iters = [], [], [], [], [], []
@@ -122,9 +122,7 @@ def bench_trace(
         # baseline noise floor: how much the always-full engine moves its
         # OWN answer when re-solving bitwise-identical telemetry
         if prev_full is not None and np.array_equal(tele[t], tele[t - 1]):
-            self_drift = max(
-                self_drift, float(np.abs(rf.allocation - prev_full).max())
-            )
+            self_drift = max(self_drift, float(np.abs(rf.allocation - prev_full).max()))
         prev_full = rf.allocation.copy()
     retraces = trace_count() - traces_before
 
@@ -202,9 +200,22 @@ GATE_N = 1024  # gate geometry (see run())
 
 
 def run(ns=(GATE_N,), steps: int = 60, seed: int = 0, fleet: bool = False) -> dict:
-    rows = [
-        bench_trace(kind, n, steps, seed) for n in ns for kind in TRACE_KINDS
-    ]
+    # host-side spans split per-case setup (build + jit warmup, outside the
+    # timed window) from the measured stepping; the per-stage summary rides
+    # along in the artifact so compile-time regressions are visible without
+    # polluting the gated wall numbers
+    was_enabled = spans.enabled()
+    spans.enable()
+    try:
+        rows = []
+        for n in ns:
+            for kind in TRACE_KINDS:
+                with spans.span(f"bench.{kind}.n{n}"):
+                    rows.append(bench_trace(kind, n, steps, seed))
+        span_summary = spans.summary(spans.drain())
+    finally:
+        if not was_enabled:
+            spans.disable()
     # ISSUE 7 acceptance: >= 2x mean per-interval wall and >= 60% skips on
     # the quasi-static trace, parity <= 1e-6 W everywhere, zero retraces
     # across skip/solve transitions.  The speed gates are evaluated at
@@ -233,6 +244,7 @@ def run(ns=(GATE_N,), steps: int = 60, seed: int = 0, fleet: bool = False) -> di
         "meets_zero_retraces": bool(
             sum(r["retraces"] for r in rows) == 0
         ),
+        "spans": span_summary,
     }
     if fleet:
         out["fleet_loop"] = bench_fleet_loop(max(ns), steps, seed)

@@ -26,6 +26,7 @@ def main() -> None:
         fleet_bench,
         kernel_bench,
         nonuniform,
+        obs_bench,
         roofline,
         satisfaction_trace,
         scaling,
@@ -83,6 +84,12 @@ def main() -> None:
         (
             "BENCH_solver",
             lambda: solver_bench.run_degenerate(n_seeds=3 if args.full else 2),
+        ),
+        # flight-recorder overhead gate (PR 8): recording must add zero
+        # retraces and <= 5% warm-step wall on the engine smoke loop
+        (
+            "BENCH_obs",
+            lambda: obs_bench.run(reps=8 if args.full else 6),
         ),
         ("solver_bench", lambda: solver_bench.run(steps=5 if args.full else 3)),
         ("kernel_bench", lambda: kernel_bench.run()),
@@ -150,6 +157,12 @@ def main() -> None:
                 f"S={r['S_global_mean']:.2f}% margins "
                 f"{r['sla_margin_mean']:.1f}%/{r['sla_margin_worst_tenant_mean']:.1f}% "
                 f"violations={r['violations']} (paper 98.93/54.4/33.8/0)"
+            ),
+            "BENCH_obs": lambda r: (
+                f"overhead x{r['overhead_ratio']:.3f} "
+                f"(bar {r['overhead_bar']}), retraces "
+                f"{r['retraces_while_recording']}, "
+                f"{r['flight_steps']} flight rows"
             ),
             "BENCH_solver": lambda r: (
                 f"{len(r['cases'])} degenerate cases, max {r['max_iterations']} "

@@ -10,7 +10,8 @@ timestamp; mean wall 264.69 ms.
 
 Emits the machine-readable ``BENCH_trace.json`` consumed by CI's
 bench-smoke job (schema + acceptance flags + regression floors via
-``check_bench.py``):
+``check_bench.py``) plus ``FLIGHT_trace.jsonl``, the engine's in-jit
+flight record (PR 8) — render it with ``python -m repro.obs.report``:
 
     PYTHONPATH=src python benchmarks/satisfaction_trace.py [--smoke|--full] \
         [--out artifacts/bench]
@@ -23,6 +24,7 @@ import numpy as np
 from repro.core.engine import AllocEngine
 from repro.core.greedy import greedy_allocate, static_allocate
 from repro.core.metrics import relative_improvement, satisfaction_ratio
+from repro.obs import export
 from repro.pdn.telemetry import TelemetrySim, TraceConfig
 from repro.pdn.tree import build_datacenter
 
@@ -35,18 +37,25 @@ PAPER = {
 
 
 def run(
-    steps: int = 60, stride: int = 48, seed: int = 0, *, smoke: bool = False
+    steps: int = 60,
+    stride: int = 48,
+    seed: int = 0,
+    *,
+    smoke: bool = False,
+    flight_out: str | None = None,
 ) -> dict:
     """``steps`` control steps sampled every ``stride`` from the 3-day
     trace (stride 48 = 24 min -> covers diurnal structure in few steps).
-    ``smoke`` shrinks the paper geometry to a CI-sized fleet."""
+    ``smoke`` shrinks the paper geometry to a CI-sized fleet.
+    ``flight_out`` writes the engine's flight record (one JSONL row per
+    control step, host walls merged in) for ``python -m repro.obs.report``."""
     pdn = (
         build_datacenter(n_halls=1, racks_per_hall=8, servers_per_rack=8)
         if smoke
         else build_datacenter()
     )
     sim = TelemetrySim(TraceConfig(n_devices=pdn.n, seed=seed))
-    eng = AllocEngine(pdn)
+    eng = AllocEngine(pdn, recorder=True)
     s_nv, s_st, s_gr, du_st, du_gr, wall = [], [], [], [], [], []
     for i in range(steps):
         power = sim.power(i * stride)
@@ -64,6 +73,10 @@ def run(
         wall.append(res.wall_time_s * 1000)
     s_nv, s_st, s_gr = map(np.asarray, (s_nv, s_st, s_gr))
     wall_warm = wall[1:]  # drop the compile step
+    flight = eng.flush_recorder()
+    rows = export.flight_rows(flight["step"], walls_ms=wall)
+    if flight_out is not None:
+        export.write_jsonl(flight_out, rows)
     out = {
         "steps": steps,
         "stride": stride,
@@ -72,6 +85,12 @@ def run(
         "S_nvpax_std": 100 * s_nv.std(),
         "S_nvpax_min": 100 * s_nv.min(),
         "S_nvpax_max": 100 * s_nv.max(),
+        # per-step percentiles: the mean hides tail steps where satisfaction
+        # dips (brown spikes in the trace), so the floor gates the p50 too
+        "S_nvpax_p50": 100 * float(np.percentile(s_nv, 50)),
+        "S_nvpax_p99": 100 * float(np.percentile(s_nv, 99)),
+        "S_nvpax_p1": 100 * float(np.percentile(s_nv, 1)),
+        "flight_steps": len(rows),
         "S_static_mean": 100 * s_st.mean(),
         "S_greedy_mean": 100 * s_gr.mean(),
         "dU_static_mean_pct": float(np.mean(du_st)),
@@ -107,14 +126,15 @@ def main() -> None:
     ap.add_argument("--out", default="artifacts/bench")
     args = ap.parse_args()
 
-    if args.smoke:
-        res = run(steps=12, stride=96, smoke=True)
-    elif args.full:
-        res = run(steps=120, stride=24)
-    else:
-        res = run()
-
     os.makedirs(args.out, exist_ok=True)
+    flight_path = os.path.join(args.out, "FLIGHT_trace.jsonl")
+    if args.smoke:
+        res = run(steps=12, stride=96, smoke=True, flight_out=flight_path)
+    elif args.full:
+        res = run(steps=120, stride=24, flight_out=flight_path)
+    else:
+        res = run(flight_out=flight_path)
+
     path = os.path.join(args.out, "BENCH_trace.json")
     with open(path, "w") as f:
         json.dump(res, f, indent=1)
@@ -123,8 +143,9 @@ def main() -> None:
         f"{res['S_nvpax_mean']:.2f}% / static {res['S_static_mean']:.2f}% / "
         f"greedy {res['S_greedy_mean']:.2f}% "
         f"(paper {PAPER['S_nvpax_mean']}/{PAPER['S_static_mean']}/"
-        f"{PAPER['S_greedy_mean']}); wall {res['wall_ms_mean']:.1f}ms "
-        f"(paper {PAPER['wall_ms_mean']}); wrote {path}"
+        f"{PAPER['S_greedy_mean']}); p50/p99 {res['S_nvpax_p50']:.2f}/"
+        f"{res['S_nvpax_p99']:.2f}%; wall {res['wall_ms_mean']:.1f}ms "
+        f"(paper {PAPER['wall_ms_mean']}); wrote {path} + {flight_path}"
     )
 
 

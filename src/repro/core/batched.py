@@ -53,7 +53,10 @@ from repro.compat import enable_x64
 from repro.core import phases, solver
 from repro.core.nvpax import NvpaxOptions
 from repro.core.problem import AllocProblem
+from repro.core.solver.options import KKT_HIST_BUCKETS
 from repro.core.waterfill import waterfill_jax
+from repro.obs import recorder as obs_recorder
+from repro.obs.stats import StepStats
 
 __all__ = [
     "BatchMeta",
@@ -100,6 +103,11 @@ class BatchedStepState(NamedTuple):
     converged: jnp.ndarray  # bool: all executed solves converged
     certified: jnp.ndarray  # bool: all executed solves KKT-certified
     done: jnp.ndarray  # bool: early-exit flag (max-min rounds)
+    # flight-recorder gauges (PR 8): worst KKT residual over executed
+    # solves, cumulative restarts, and the in-loop KKT-score histogram
+    kkt_res: jnp.ndarray  # dtype scalar
+    restarts: jnp.ndarray  # int32
+    kkt_hist: jnp.ndarray  # [KKT_HIST_BUCKETS] int32
 
 
 @dataclass
@@ -115,6 +123,9 @@ class BatchedAllocResult:
     # incremental-mode anchor for the next step ([K, ...] leaves; None unless
     # a carry was threaded in — see repro.core.solver.certify)
     carry: Any = None
+    # updated per-lane flight-recorder state (None unless one was passed in
+    # — see repro.obs.recorder)
+    recorder: Any = None
 
 
 def batch_meta(ap: AllocProblem, options: NvpaxOptions) -> BatchMeta:
@@ -204,6 +215,9 @@ def _phase1_scan(
         converged=jnp.asarray(True),
         certified=jnp.asarray(True),
         done=jnp.asarray(False),
+        kkt_res=jnp.zeros((), ap.l.dtype),
+        restarts=jnp.zeros((), jnp.int32),
+        kkt_hist=jnp.zeros((KKT_HIST_BUCKETS,), jnp.int32),
     )
     if not meta.levels:
         return init
@@ -220,6 +234,9 @@ def _phase1_scan(
             )
             sol, stats = solver.solve(prob, ap.tree, ap.sla, sol, opts)
             x = phases.repair(sol.x, ap, meta.n_depths)
+            res = jnp.maximum(
+                jnp.maximum(stats.primal_res, stats.dual_res), stats.comp_res
+            )
             return BatchedStepState(
                 x=x,
                 solver=sol,
@@ -229,6 +246,9 @@ def _phase1_scan(
                 converged=st.converged & stats.converged,
                 certified=st.certified & stats.certified,
                 done=st.done,
+                kkt_res=jnp.maximum(st.kkt_res, res),
+                restarts=st.restarts + stats.restarts,
+                kkt_hist=st.kkt_hist + stats.score_hist,
             )
 
         # the host driver only sweeps levels present among this scenario's
@@ -283,6 +303,9 @@ def _maxmin_loop(
             converged=jnp.asarray(True),
             certified=jnp.asarray(True),
             done=jnp.asarray(True),
+            kkt_res=jnp.zeros((), dtype),
+            restarts=jnp.zeros((), jnp.int32),
+            kkt_hist=jnp.zeros((KKT_HIST_BUCKETS,), jnp.int32),
         )
 
     # freeze devices with no slack at entry (see phases.run_maxmin_phase)
@@ -296,6 +319,9 @@ def _maxmin_loop(
         converged=jnp.asarray(True),
         certified=jnp.asarray(True),
         done=jnp.asarray(False),
+        kkt_res=jnp.zeros((), dtype),
+        restarts=jnp.zeros((), jnp.int32),
+        kkt_hist=jnp.zeros((KKT_HIST_BUCKETS,), jnp.int32),
     )
 
     def cond(st: BatchedStepState):
@@ -327,6 +353,9 @@ def _maxmin_loop(
         # host driver: stop when no measurable head-room is left AND nothing
         # newly saturated needs freezing
         done = (sol.t <= phases.SAT_TOL) & ~jnp.any(sat)
+        res = jnp.maximum(
+            jnp.maximum(stats.primal_res, stats.dual_res), stats.comp_res
+        )
         return BatchedStepState(
             x=x_new,
             solver=sol,
@@ -336,6 +365,9 @@ def _maxmin_loop(
             converged=st.converged & stats.converged,
             certified=st.certified & stats.certified,
             done=done,
+            kkt_res=jnp.maximum(st.kkt_res, res),
+            restarts=st.restarts + stats.restarts,
+            kkt_hist=st.kkt_hist + stats.score_hist,
         )
 
     return lax.while_loop(cond, body, init)
@@ -420,6 +452,9 @@ def solve_three_phase(
             converged=jnp.asarray(True),
             certified=jnp.asarray(True),
             done=jnp.asarray(False),
+            kkt_res=jnp.zeros((), dtype),
+            restarts=jnp.zeros((), jnp.int32),
+            kkt_hist=jnp.zeros((KKT_HIST_BUCKETS,), jnp.int32),
         )
 
     def refine(x, sol, opt_set, free_set, iters_before):
@@ -457,7 +492,10 @@ def solve_three_phase(
                          solves=jnp.zeros((), jnp.int32),
                          iterations=jnp.zeros((), jnp.int32),
                          converged=jnp.asarray(True),
-                         certified=jnp.asarray(True))
+                         certified=jnp.asarray(True),
+                         kkt_res=jnp.zeros((), dtype),
+                         restarts=jnp.zeros((), jnp.int32),
+                         kkt_hist=jnp.zeros((KKT_HIST_BUCKETS,), jnp.int32))
         x2 = x1
 
     w3 = phases.merge_warm(p2.solver, warm.p3 if warm is not None else None)
@@ -474,7 +512,10 @@ def solve_three_phase(
                          solves=jnp.zeros((), jnp.int32),
                          iterations=jnp.zeros((), jnp.int32),
                          converged=jnp.asarray(True),
-                         certified=jnp.asarray(True))
+                         certified=jnp.asarray(True),
+                         kkt_res=jnp.zeros((), dtype),
+                         restarts=jnp.zeros((), jnp.int32),
+                         kkt_hist=jnp.zeros((KKT_HIST_BUCKETS,), jnp.int32))
         x3 = x2
 
     stats = {
@@ -489,6 +530,11 @@ def solve_three_phase(
         "converged": p1.converged & p2.converged & p3.converged,
         "kkt_certified": p1.certified & p2.certified & p3.certified,
         "truncated": truncated,
+        # flight-recorder gauges: worst residual over phases, restart and
+        # in-loop KKT-score-histogram totals
+        "kkt_res": jnp.maximum(jnp.maximum(p1.kkt_res, p2.kkt_res), p3.kkt_res),
+        "restarts": p1.restarts + p2.restarts + p3.restarts,
+        "kkt_hist": p1.kkt_hist + p2.kkt_hist + p3.kkt_hist,
         # incremental certify outcome, on every path (False consts when no
         # carry was given) — jnp scalars so they survive vmap
         "skipped": jnp.asarray(False) if carry is None else skip,
@@ -498,7 +544,30 @@ def solve_three_phase(
     return x1, x2, x3, wcarry, stats
 
 
-@functools.partial(jax.jit, static_argnames=("meta", "opts"))
+def _record_batch(
+    cfg: obs_recorder.RecorderConfig,
+    rec: obs_recorder.RecorderState,
+    stats: dict,
+    alloc: jnp.ndarray,
+    stacked: AllocProblem,
+) -> obs_recorder.RecorderState:
+    """Append one flight-record row per scenario lane (vmapped; pure
+    fixed-shape ops, so recording shares the unrecorded compilation)."""
+    sla = stacked.sla
+    nrows = int(sla.lo.shape[0])
+
+    def one(rec_one, st_one, a, l, u, r, active):
+        r_eff = jnp.where(active, jnp.clip(r, l, u), 0.0)
+        margin = obs_recorder.sla_min_margin(a, sla.dev, sla.ten, sla.lo, nrows)
+        m = obs_recorder.step_metrics(st_one, a, r_eff, margin)
+        return obs_recorder.record_step(cfg, rec_one, m, a)
+
+    return jax.vmap(one)(
+        rec, stats, alloc, stacked.l, stacked.u, stacked.r, stacked.active
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("meta", "opts", "rec_cfg"))
 def _solve_batched(
     stacked: AllocProblem,
     meta: BatchMeta,
@@ -506,6 +575,8 @@ def _solve_batched(
     warm: phases.WarmCarry | None,
     iter_budget: jnp.ndarray | None = None,
     carry: solver.IncrementalCarry | None = None,
+    rec: obs_recorder.RecorderState | None = None,
+    rec_cfg: obs_recorder.RecorderConfig | None = None,
 ):
     """vmap of the three-phase engine over the leading scenario axis.
 
@@ -515,8 +586,13 @@ def _solve_batched(
     while-loop batching rule), and when *every* scenario certifies a full
     skip a scalar ``lax.cond`` short-circuits the whole vmapped solve to the
     O(matvec) assembly below — that is what collapses the quasi-static fleet
-    step to certify cost.  Returns ``(x1, x2, x3, warm_carry, stats,
-    new_carry)``.
+    step to certify cost.
+
+    ``rec``/``rec_cfg`` (flight recorder, PR 8) thread per-lane
+    :class:`repro.obs.recorder.RecorderState` pytrees through the step:
+    recording happens AFTER the all-skip short-circuit so both the fast and
+    vmapped paths log their step.  Returns ``(x1, x2, x3, warm_carry, stats,
+    new_carry, rec)``.
     """
     tree, sla = stacked.tree, stacked.sla
     fleet_axes = (0, 0, 0, 0, 0, 0)
@@ -554,10 +630,17 @@ def _solve_batched(
         axes = fleet_axes + (warm_axes, None if c is None else 0)
         return jax.vmap(one, in_axes=axes)(*fleet_leaves, warm, c)
 
+    def finish(out):
+        x1, x2, x3, wc, stats, new_carry = out
+        new_rec = rec
+        if rec is not None and rec_cfg is not None:
+            new_rec = _record_batch(rec_cfg, rec, stats, x3, stacked)
+        return x1, x2, x3, wc, stats, new_carry, new_rec
+
     if carry is None or warm is None:
         # no anchor yet (or no warm state to thread through the all-skip
         # assembly): per-lane gating alone
-        return run_vmapped(carry)
+        return finish(run_vmapped(carry))
 
     def cert_one(l, u, r, priority, active, weight_scale, carry_one):
         ap = AllocProblem(
@@ -595,6 +678,9 @@ def _solve_batched(
             "truncated": jnp.zeros((kk,), bool),
             "skipped": dec.skip,
             "certify_pass": dec.skip | dec.skip_p1,
+            "kkt_res": jnp.zeros((kk,), stacked.l.dtype),
+            "restarts": zi,
+            "kkt_hist": jnp.zeros((kk, KKT_HIST_BUCKETS), jnp.int32),
         }
         wcarry = phases.WarmCarry(p1_sol, w2, w3)
         return carry.x1, dec.x_snap, dec.x_snap, wcarry, stats, carry
@@ -602,7 +688,7 @@ def _solve_batched(
     def slow(_):
         return run_vmapped(carry)
 
-    return lax.cond(jnp.all(dec.skip), fast, slow, None)
+    return finish(lax.cond(jnp.all(dec.skip), fast, slow, None))
 
 
 # ---------------------------------------------------------------------------
@@ -699,7 +785,7 @@ def calibrate_phase_cost(
             b = jnp.asarray(budget, jnp.int32)
             _solve_batched(stacked, meta, opts, None, b)[2].block_until_ready()
             t0 = time.perf_counter()
-            _, _, x3, _, stats, _ = _solve_batched(stacked, meta, opts, None, b)
+            _, _, x3, _, stats, _, _ = _solve_batched(stacked, meta, opts, None, b)
             x3.block_until_ready()
             wall = time.perf_counter() - t0
             per_phase = [
@@ -737,6 +823,8 @@ def optimize_batched(
     meta: BatchMeta | None = None,
     iter_budget: int | None = None,
     carry: Any = None,
+    rec: Any = None,
+    rec_cfg: Any = None,
 ) -> BatchedAllocResult:
     """Run Algorithm 3 on K scenarios as ONE jitted+vmapped program.
 
@@ -765,6 +853,11 @@ def optimize_batched(
     ``stats["skipped"]``/``stats["certify_pass"]`` (they survive the vmap as
     ``[K]`` arrays), and an all-skip batch collapses to certify cost.
 
+    Flight recorder: ``rec``/``rec_cfg`` thread per-lane
+    :class:`repro.obs.recorder.RecorderState` pytrees (``[K, ...]`` leaves,
+    see :func:`repro.obs.recorder.init_batch`); the updated state comes back
+    as ``BatchedAllocResult.recorder``.
+
     Output matches per-scenario :func:`repro.core.nvpax.optimize` to solver
     tolerance (asserted in ``tests/test_batched.py``).
     """
@@ -784,8 +877,8 @@ def optimize_batched(
         budget = (
             None if iter_budget is None else jnp.asarray(iter_budget, jnp.int32)
         )
-        x1, x2, x3, sol_state, stats, new_carry = _solve_batched(
-            stacked, meta, options.solver, warm, budget, carry
+        x1, x2, x3, sol_state, stats, new_carry, new_rec = _solve_batched(
+            stacked, meta, options.solver, warm, budget, carry, rec, rec_cfg
         )
         x3 = x3.block_until_ready()
     wall = time.perf_counter() - t0
@@ -796,24 +889,10 @@ def optimize_batched(
         warm_state=sol_state,
         wall_time_s=wall,
         carry=new_carry if carry is not None or options.incremental else None,
-        stats={
-            "solves": np.asarray(stats["solves"]),
-            "iterations": np.asarray(stats["iterations"]),
-            "iterations_per_phase": np.stack(
-                [np.asarray(stats[f"iterations_p{i}"]) for i in (1, 2, 3)],
-                axis=-1,
-            ),
-            # uniform name across host optimize / engine / fleet stats
-            "phase_iterations": np.stack(
-                [np.asarray(stats[f"iterations_p{i}"]) for i in (1, 2, 3)],
-                axis=-1,
-            ),
-            "converged": np.asarray(stats["converged"]),
-            "kkt_certified": np.asarray(stats["kkt_certified"]),
-            "truncated": np.asarray(stats["truncated"]),
-            "skipped": np.asarray(stats["skipped"]),
-            "certify_pass": np.asarray(stats["certify_pass"]),
-            "iter_budget": iter_budget,
-            "n_scenarios": int(stacked.l.shape[0]),
-        },
+        recorder=new_rec if rec is not None else None,
+        stats=StepStats.from_jit(
+            stats,
+            iter_budget=iter_budget,
+            n_scenarios=int(stacked.l.shape[0]),
+        ),
     )

@@ -64,6 +64,8 @@ from repro.core.nvpax import AllocResult, NvpaxOptions
 from repro.core.problem import AllocProblem, FleetTopology
 from repro.core.solver import certify
 from repro.core.treeops import SlaTopo
+from repro.obs import recorder as obs_recorder
+from repro.obs.stats import StepStats
 from repro.pdn.tree import FlatPDN, check_caps_fund_minimums
 
 __all__ = ["AllocEngine", "trace_count"]
@@ -90,11 +92,22 @@ def _shape_requests(r, active, l, u):
 
 
 def _engine_solve(
-    fleet, r, priority, active, warm, iter_budget, carry=None, *, meta, opts
+    fleet,
+    r,
+    priority,
+    active,
+    warm,
+    iter_budget,
+    carry=None,
+    rec=None,
+    *,
+    meta,
+    opts,
+    rec_cfg=None,
 ):
     """The whole control step as one traced program: request pre-processing
     (paper section 5.2) + certify-first incremental gate + three-phase solve
-    + exact feasibility repair."""
+    + exact feasibility repair (+ optional flight-recorder append)."""
     global _N_TRACES
     _N_TRACES += 1  # executes at trace time only (side effect outside jnp ops)
     r = _shape_requests(r, active, fleet.l, fleet.u)
@@ -112,7 +125,18 @@ def _engine_solve(
     new_carry = certify.update_carry(
         carry, ap, x1, x3, stats["skipped"], stats["certify_pass"] & ~stats["skipped"]
     )
-    return x1, x2, x3, sol, stats, new_carry
+    if rec is not None and rec_cfg is not None:
+        nrows = int(fleet.sla.lo.shape[0])
+        margin = obs_recorder.sla_min_margin(
+            x3, fleet.sla.dev, fleet.sla.ten, fleet.sla.lo, nrows
+        )
+        # idle devices request l by shaping; zero them out of the
+        # satisfaction denominator (they have no demand to satisfy)
+        m = obs_recorder.step_metrics(
+            stats, x3, jnp.where(active, r, 0.0), margin
+        )
+        rec = obs_recorder.record_step(rec_cfg, rec, m, x3)
+    return x1, x2, x3, sol, stats, new_carry, rec
 
 
 # One compiled executable per (shapes, meta, opts): engines over the same
@@ -122,7 +146,15 @@ def _engine_solve(
 # buffers the caller still holds), and with run_phase2/3 disabled the carry
 # aliases the same buffer in two leaves, which XLA rejects for donation.
 # Revisit with accelerator CI + a copy-on-return boundary.
-_engine_step_jit = jax.jit(_engine_solve, static_argnames=("meta", "opts"))
+_engine_step_jit = jax.jit(
+    _engine_solve,
+    static_argnames=("meta", "opts", "rec_cfg"),
+    # the recorder ring IS donation-safe (unlike the warm state above): the
+    # caller holds no reference to the previous RecorderState once the step
+    # returns the advanced one, so the [capacity, 16] ring updates in place
+    # instead of being copied every step
+    donate_argnames=("rec",),
+)
 
 
 class AllocEngine:
@@ -146,11 +178,21 @@ class AllocEngine:
         normalized: bool = False,
         dtype=jnp.float64,
         pin_free: bool | None = None,
+        recorder: obs_recorder.RecorderConfig | bool | None = None,
     ):
         self.pdn = pdn
         self.options = options or NvpaxOptions()
         self.idle_threshold = float(idle_threshold)
         self.dtype = dtype
+        # flight recorder (PR 8): True -> default config; a RecorderConfig
+        # pins the ring shape.  State is lazily initialized per path (the
+        # step() recorder is single-lane; step_batched keeps one [K, ...]
+        # state per batch size, like the warm caches).
+        if recorder is True:
+            recorder = obs_recorder.RecorderConfig()
+        self._rec_cfg: obs_recorder.RecorderConfig | None = recorder or None
+        self._rec_state: obs_recorder.RecorderState | None = None
+        self._rec_batched: dict[int, obs_recorder.RecorderState] = {}
         self._x64 = bool(self.options.x64) and dtype == jnp.float64
         with self._ctx():
             self.fleet = FleetTopology.from_pdn(
@@ -209,11 +251,38 @@ class AllocEngine:
         return self.pdn.n
 
     def reset_warm(self) -> None:
-        """Drop carried solver state (next step/step_batched cold-starts)."""
+        """Drop carried solver state (next step/step_batched cold-starts).
+        The flight recorder is telemetry, not solver state — it survives."""
         self._warm = None
         self._batched_warm.clear()
         self._inc_carry = None
         self._inc_batched_carry.clear()
+
+    # -- flight recorder (PR 8) --------------------------------------------
+
+    @property
+    def recorder_config(self) -> obs_recorder.RecorderConfig | None:
+        return self._rec_cfg
+
+    def flush_recorder(self, *, reset: bool = False) -> dict[str, Any] | None:
+        """Materialize the flight record(s) to host numpy (the recorder's
+        only host transfer).  Returns ``{"step": flush, "batched": {K:
+        [per-lane flushes]}}`` with absent keys for paths never stepped;
+        None when the engine was built without a recorder."""
+        if self._rec_cfg is None:
+            return None
+        out: dict[str, Any] = {}
+        if self._rec_state is not None:
+            out["step"] = obs_recorder.flush(self._rec_state, self._rec_cfg)
+        if self._rec_batched:
+            out["batched"] = {
+                K: obs_recorder.flush_lanes(st, self._rec_cfg)
+                for K, st in self._rec_batched.items()
+            }
+        if reset:
+            self._rec_state = None
+            self._rec_batched.clear()
+        return out
 
     # -- in-place topology re-pin (no recompile) ---------------------------
 
@@ -431,7 +500,11 @@ class AllocEngine:
             # to the host driver's cold path.  The incremental anchor is a
             # third traced input: skip/solve transitions share one program.
             inc = self._inc_carry if self.options.incremental else None
-            x1, x2, x3, solver, stats, new_carry = _engine_step_jit(
+            if self._rec_cfg is not None and self._rec_state is None:
+                self._rec_state = obs_recorder.init_state(
+                    self._rec_cfg, self.n, self.dtype
+                )
+            x1, x2, x3, solver, stats, new_carry, new_rec = _engine_step_jit(
                 self.fleet,
                 jnp.asarray(req, self.dtype),
                 self.priority,
@@ -439,14 +512,18 @@ class AllocEngine:
                 self._warm,
                 None if budget is None else jnp.asarray(budget, jnp.int32),
                 inc,
+                self._rec_state,
                 meta=self.meta,
                 opts=self.options.solver,
+                rec_cfg=self._rec_cfg,
             )
             x3 = x3.block_until_ready()
         wall = time.perf_counter() - t0
         self._warm = solver
         if self.options.incremental:
             self._inc_carry = new_carry
+        if self._rec_cfg is not None:
+            self._rec_state = new_rec
         res = AllocResult(
             allocation=np.asarray(x3),
             phase1=np.asarray(x1),
@@ -454,19 +531,7 @@ class AllocEngine:
             warm_state=solver,
             wall_time_s=wall,
             carry=new_carry if self.options.incremental else None,
-            stats={
-                "total_solves": int(stats["solves"]),
-                "total_iterations": int(stats["iterations"]),
-                "phase_iterations": [
-                    int(stats[f"iterations_p{i}"]) for i in (1, 2, 3)
-                ],
-                "converged": bool(stats["converged"]),
-                "kkt_certified": bool(stats["kkt_certified"]),
-                "truncated": bool(stats["truncated"]),
-                "skipped": bool(stats["skipped"]),
-                "certify_pass": bool(stats["certify_pass"]),
-                "iter_budget": budget,
-            },
+            stats=StepStats.from_jit(stats, scalar=True, iter_budget=budget),
         )
         self.history.append(
             {
@@ -530,6 +595,10 @@ class AllocEngine:
                 sla=fl.sla,
                 weight_scale=jnp.broadcast_to(fl.weight_scale, (K, n)),
             )
+            if self._rec_cfg is not None and K not in self._rec_batched:
+                self._rec_batched[K] = obs_recorder.init_batch(
+                    self._rec_cfg, K, n, self.dtype
+                )
             res = optimize_batched(
                 stacked,
                 self.options,
@@ -540,9 +609,13 @@ class AllocEngine:
                     if self.options.incremental and carry_warm
                     else None
                 ),
+                rec=self._rec_batched.get(K),
+                rec_cfg=self._rec_cfg,
             )
         if carry_warm:
             self._batched_warm[K] = res.warm_state
             if self.options.incremental:
                 self._inc_batched_carry[K] = res.carry
+        if self._rec_cfg is not None and res.recorder is not None:
+            self._rec_batched[K] = res.recorder
         return res

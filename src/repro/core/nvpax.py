@@ -22,6 +22,7 @@ from repro.compat import enable_x64
 from repro.core import phases
 from repro.core import solver as solver_mod
 from repro.core.problem import AllocProblem
+from repro.obs.stats import StepStats
 
 __all__ = ["AllocResult", "NvpaxOptions", "optimize"]
 
@@ -125,19 +126,19 @@ def optimize(
                 phase2=np.asarray(x3),
                 warm_state=warm,
                 wall_time_s=time.perf_counter() - t0,
-                stats={
-                    "phase1": zero._asdict(),
-                    "phase2": zero._asdict(),
-                    "phase3": zero._asdict(),
-                    "total_solves": 0,
-                    "total_iterations": 0,
-                    "phase_iterations": [0, 0, 0],
-                    "converged": True,
-                    "kkt_certified": True,
-                    "truncated": False,
-                    "skipped": True,
-                    "certify_pass": True,
-                },
+                stats=StepStats.build(
+                    solves=0,
+                    iterations=0,
+                    phase_iterations=[0, 0, 0],
+                    converged=True,
+                    skipped=True,
+                    certify_pass=True,
+                    kkt_certified=True,
+                    truncated=False,
+                    phase1=zero._asdict(),
+                    phase2=zero._asdict(),
+                    phase3=zero._asdict(),
+                ),
                 carry=carry,
             )
         if p1_reused:
@@ -200,20 +201,20 @@ def optimize(
         phase2=np.asarray(x2),
         warm_state=phases.WarmCarry(carry1, carry2, carry3),
         wall_time_s=wall,
-        stats={
-            "phase1": s1._asdict(),
-            "phase2": s2._asdict(),
-            "phase3": s3._asdict(),
-            "total_solves": s1.solves + s2.solves + s3.solves,
-            "total_iterations": s1.iterations + s2.iterations + s3.iterations,
-            "phase_iterations": [s1.iterations, s2.iterations, s3.iterations],
-            "converged": s1.converged and s2.converged and s3.converged,
-            "kkt_certified": s1.kkt_certified
+        stats=StepStats.build(
+            solves=s1.solves + s2.solves + s3.solves,
+            iterations=s1.iterations + s2.iterations + s3.iterations,
+            phase_iterations=[s1.iterations, s2.iterations, s3.iterations],
+            converged=s1.converged and s2.converged and s3.converged,
+            skipped=False,
+            certify_pass=p1_reused,
+            kkt_certified=s1.kkt_certified
             and s2.kkt_certified
             and s3.kkt_certified,
-            "truncated": truncated,
-            "skipped": False,
-            "certify_pass": p1_reused,
-        },
+            truncated=truncated,
+            phase1=s1._asdict(),
+            phase2=s2._asdict(),
+            phase3=s3._asdict(),
+        ),
         carry=new_carry,
     )

@@ -41,7 +41,13 @@ from repro.core.solver.certify import (
     update_carry,
 )
 from repro.core.solver.loop import solve
-from repro.core.solver.options import SolveStats, SolverOptions, SolverState
+from repro.core.solver.options import (
+    KKT_HIST_BUCKETS,
+    KKT_HIST_LO_EXP,
+    SolveStats,
+    SolverOptions,
+    SolverState,
+)
 from repro.core.solver.scaling import (
     Scales,
     StepSizes,
@@ -53,6 +59,8 @@ from repro.core.solver.scaling import (
 from repro.core.solver.termination import kkt_residuals, polish_t, primal_residual
 
 __all__ = [
+    "KKT_HIST_BUCKETS",
+    "KKT_HIST_LO_EXP",
     "SolverOptions",
     "SolverState",
     "SolveStats",

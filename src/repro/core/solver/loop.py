@@ -21,7 +21,13 @@ from jax import lax
 from repro.core.problem import StepProblem
 from repro.core.solver import restarts as restarts_mod
 from repro.core.solver import scaling, termination
-from repro.core.solver.options import SolveStats, SolverOptions, SolverState
+from repro.core.solver.options import (
+    KKT_HIST_BUCKETS,
+    KKT_HIST_LO_EXP,
+    SolveStats,
+    SolverOptions,
+    SolverState,
+)
 from repro.core.treeops import (
     SlaTopo,
     TreeTopo,
@@ -243,6 +249,9 @@ def solve(
         restarts: jnp.ndarray
         done: jnp.ndarray
         certified: jnp.ndarray
+        # [KKT_HIST_BUCKETS] int32: log10 buckets of the candidate KKT
+        # score at each check (flight-recorder histogram substrate)
+        score_hist: jnp.ndarray
 
     # In the scaled metric curvature is 1 and variable travel is O(1), so
     # omega = 1 is the natural start for both QP and LP; adaptive
@@ -288,6 +297,7 @@ def solve(
         restarts=jnp.zeros((), jnp.int32),
         done=jnp.asarray(False),
         certified=jnp.asarray(False),
+        score_hist=jnp.zeros((KKT_HIST_BUCKETS,), jnp.int32),
     )
 
     def cond(c: Carry):
@@ -350,6 +360,18 @@ def solve(
         ysn = pick(ys, ysa, jnp.zeros_like(ys)) if k else ys
         yin = pick(yi, yia, jnp.zeros_like(yi))
         score_cand = jnp.minimum(jnp.minimum(score, score_a), score_z)
+        # log10 bucket of this check's best score (one-hot add: vmap-safe)
+        score_b = jnp.clip(
+            jnp.floor(
+                jnp.log10(jnp.maximum(score_cand, 10.0**KKT_HIST_LO_EXP))
+            ).astype(jnp.int32)
+            - KKT_HIST_LO_EXP,
+            0,
+            KKT_HIST_BUCKETS - 1,
+        )
+        score_hist = c.score_hist + (
+            jnp.arange(KKT_HIST_BUCKETS, dtype=jnp.int32) == score_b
+        ).astype(jnp.int32)
         pn = pick(p, pa, pz)
         dn = pick(d, da, dz)
         cn = pick(cm, ca, cz)
@@ -509,6 +531,7 @@ def solve(
             restarts=c.restarts + do_restart.astype(jnp.int32),
             done=done,
             certified=done_kkt,
+            score_hist=score_hist,
         )
 
     final = lax.while_loop(cond, body, c0)
@@ -530,5 +553,6 @@ def solve(
         omega=final.omega,
         certified=final.certified,
         restarts=final.restarts,
+        score_hist=final.score_hist,
     )
     return state, stats

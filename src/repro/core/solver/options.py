@@ -13,7 +13,21 @@ from typing import NamedTuple
 
 import jax.numpy as jnp
 
-__all__ = ["SolverOptions", "SolverState", "SolveStats"]
+__all__ = [
+    "KKT_HIST_BUCKETS",
+    "KKT_HIST_LO_EXP",
+    "SolverOptions",
+    "SolverState",
+    "SolveStats",
+]
+
+# Shape of the in-loop KKT-score histogram accumulated by the solve loop
+# (and re-used by the flight recorder's log-bucketed gauges): bucket ``b``
+# holds scores in ``[10**(LO_EXP+b), 10**(LO_EXP+b+1))``, clipped at both
+# ends.  Fixed module constants — not SolverOptions knobs — so the stats
+# pytree shape is identical across option values.
+KKT_HIST_BUCKETS = 16
+KKT_HIST_LO_EXP = -12
 
 
 class SolverOptions(NamedTuple):
@@ -108,3 +122,6 @@ class SolveStats(NamedTuple):
     # no-progress/optimal-vertex certificate (see solver.termination)
     certified: jnp.ndarray  # bool
     restarts: jnp.ndarray  # int32
+    # [KKT_HIST_BUCKETS] int32: log10-bucketed KKT scores observed at the
+    # in-loop termination checks (flight-recorder substrate, PR 8)
+    score_hist: jnp.ndarray

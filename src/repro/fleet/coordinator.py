@@ -48,6 +48,7 @@ import numpy as np
 
 from repro.core.waterfill import waterfill_arrays
 from repro.fleet.partition import FleetPartition, FleetSla
+from repro.obs import spans
 from repro.pdn.tree import check_caps_fund_minimums
 
 __all__ = ["BudgetCoordinator", "check_tenants_deliverable", "split_entitlements"]
@@ -199,6 +200,7 @@ class BudgetCoordinator:
             self.start, self.end, cap, u, base, np.ones(self.k, bool)
         )
 
+    @spans.traced("coordinator.plan")
     def plan(
         self,
         demand: np.ndarray,
@@ -258,6 +260,7 @@ class BudgetCoordinator:
         grants = self._fill(grants, dcap, ccap)
         return grants
 
+    @spans.traced("coordinator.plan_sla")
     def plan_sla(
         self,
         demand: np.ndarray,

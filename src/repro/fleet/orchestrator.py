@@ -76,6 +76,9 @@ from repro.fleet.partition import (
     build_fleet_sla,
     split_pdn,
 )
+from repro.obs import recorder as obs_recorder
+from repro.obs import spans
+from repro.obs.stats import StepStats
 from repro.pdn.tree import FlatPDN, check_caps_fund_minimums
 
 __all__ = ["FleetOrchestrator", "FleetStepResult", "trace_count"]
@@ -106,7 +109,27 @@ class _DomainBatch(NamedTuple):
     sla_ten: jnp.ndarray  # [K, E] int32
 
 
-def _solve_domains(dom, cap, sla_lo, sla_hi, r, active, warm, carry=None, *, meta, opts):
+def _record_domains(cfg, rec, stats, alloc, dom, sla_lo, r, active):
+    """Per-domain flight-record append (vmapped over the lane axis; under
+    shard_map each shard records its own lanes with no collectives)."""
+    nrows = int(sla_lo.shape[1])
+
+    def one(rec_k, st_k, a, l, u, sdev, sten, slo, r_k, act_k):
+        r_eff = jnp.where(act_k, jnp.clip(r_k, l, u), 0.0)
+        margin = obs_recorder.sla_min_margin(a, sdev, sten, slo, nrows)
+        m = obs_recorder.step_metrics(st_k, a, r_eff, margin)
+        return obs_recorder.record_step(cfg, rec_k, m, a)
+
+    return jax.vmap(one)(
+        rec, stats, alloc, dom.l, dom.u, dom.sla_dev, dom.sla_ten,
+        sla_lo, r, active,
+    )
+
+
+def _solve_domains(
+    dom, cap, sla_lo, sla_hi, r, active, warm, carry=None, rec=None,
+    *, meta, opts, rec_cfg=None,
+):
     """The vmapped per-domain three-phase solve over [K, ...] arrays.
 
     Shared body of the stacked dispatch (:func:`_fleet_solve`) and the
@@ -120,8 +143,12 @@ def _solve_domains(dom, cap, sla_lo, sla_hi, r, active, warm, carry=None, *, met
     batch certifies a full skip a scalar ``lax.cond`` short-circuits the
     whole vmapped solve to the O(matvec) assembly below.  In the sharded
     dispatch each shard takes that branch independently (no collectives on
-    either side of the cond).  Returns ``(x1, x2, x3, warm_carry, stats,
-    new_carry)``.
+    either side of the cond).
+
+    ``rec``/``rec_cfg`` (flight recorder, PR 8) thread per-domain
+    :class:`repro.obs.recorder.RecorderState` pytrees; recording happens
+    after the all-skip cond so both branches log.  Returns ``(x1, x2, x3,
+    warm_carry, stats, new_carry, rec)``.
     """
 
     def build_problem(l, u, ws, pri, start, end, depth, sdev, sten,
@@ -178,10 +205,19 @@ def _solve_domains(dom, cap, sla_lo, sla_hi, r, active, warm, carry=None, *, met
             *dom_leaves, warm, c
         )
 
+    def finish(out):
+        x1, x2, x3, wc, stats, new_carry = out
+        new_rec = rec
+        if rec is not None and rec_cfg is not None:
+            new_rec = _record_domains(
+                rec_cfg, rec, stats, x3, dom, sla_lo, r, active
+            )
+        return x1, x2, x3, wc, stats, new_carry, new_rec
+
     if carry is None or warm is None:
         # no anchor yet (or no warm state to thread through the all-skip
         # assembly): per-lane gating alone
-        return run_vmapped(carry)
+        return finish(run_vmapped(carry))
 
     def cert_one(*args):
         ap = build_problem(*args[:-1])
@@ -216,6 +252,11 @@ def _solve_domains(dom, cap, sla_lo, sla_hi, r, active, warm, carry=None, *, met
             "truncated": jnp.zeros((kk,), bool),
             "skipped": dec.skip,
             "certify_pass": dec.skip | dec.skip_p1,
+            "kkt_res": jnp.zeros((kk,), dom.l.dtype),
+            "restarts": zi,
+            "kkt_hist": jnp.zeros(
+                (kk, solver.KKT_HIST_BUCKETS), jnp.int32
+            ),
         }
         wcarry = phases.WarmCarry(p1_sol, w2, w3)
         return carry.x1, dec.x_snap, dec.x_snap, wcarry, stats, carry
@@ -223,19 +264,25 @@ def _solve_domains(dom, cap, sla_lo, sla_hi, r, active, warm, carry=None, *, met
     def slow(_):
         return run_vmapped(carry)
 
-    return jax.lax.cond(jnp.all(dec.skip), fast, slow, None)
+    return finish(jax.lax.cond(jnp.all(dec.skip), fast, slow, None))
 
 
-def _fleet_solve(dom, cap, sla_lo, sla_hi, r, active, warm, carry=None, *, meta, opts):
+def _fleet_solve(
+    dom, cap, sla_lo, sla_hi, r, active, warm, carry=None, rec=None,
+    *, meta, opts, rec_cfg=None,
+):
     """All K domain control steps as one traced program."""
     global _N_TRACES
     _N_TRACES += 1  # executes at trace time only
     return _solve_domains(
-        dom, cap, sla_lo, sla_hi, r, active, warm, carry, meta=meta, opts=opts
+        dom, cap, sla_lo, sla_hi, r, active, warm, carry, rec,
+        meta=meta, opts=opts, rec_cfg=rec_cfg,
     )
 
 
-_fleet_step_jit = jax.jit(_fleet_solve, static_argnames=("meta", "opts"))
+_fleet_step_jit = jax.jit(
+    _fleet_solve, static_argnames=("meta", "opts", "rec_cfg")
+)
 
 
 @dataclasses.dataclass
@@ -282,6 +329,7 @@ class FleetOrchestrator:
         mode: str = "auto",
         pad_factor: float = 2.0,
         dtype=jnp.float64,
+        recorder: obs_recorder.RecorderConfig | bool | None = None,
     ):
         self.partition: FleetPartition = split_pdn(pdn, level, tenants=tenants)
         self._sla: FleetSla | None = self.partition.sla
@@ -341,6 +389,13 @@ class FleetOrchestrator:
         self._inc_carry: Any = None
         self._loop_prev: dict[str, Any] | None = None
         self.history: list[dict[str, Any]] = []
+        # flight recorder (PR 8): stacked/sharded keep one [K, ...]-leaf
+        # state threaded through the jitted step; loop mode delegates to
+        # each domain engine's own recorder (built below)
+        if recorder is True:
+            recorder = obs_recorder.RecorderConfig()
+        self._rec_cfg: obs_recorder.RecorderConfig | None = recorder or None
+        self._rec_state: obs_recorder.RecorderState | None = None
         if self._sla is not None:
             # fail fast: contracts must be deliverable and fundable under
             # the nameplate feeds before the first step
@@ -482,6 +537,7 @@ class FleetOrchestrator:
             # runtime grant changes) and may rise above zero later; the
             # pin-free simplification must stay off for SLA domains
             pin_free=False if sla_topo is not None else None,
+            recorder=self._rec_cfg,
         )
 
     def _slice_aggregates(
@@ -999,23 +1055,29 @@ class FleetOrchestrator:
             # program (the one cross-shard reduction); the host only shapes
             # the [K, N] scatter and the demand-free planning arrays
             t0 = time.perf_counter()
-            res, grants, demand, slice_lo, slice_hi = self._step_sharded(
-                req, active, offs
-            )
+            with spans.span("fleet.dispatch"):
+                res, grants, demand, slice_lo, slice_hi = self._step_sharded(
+                    req, active, offs
+                )
             wall = time.perf_counter() - t0
         else:
-            l_all = self.device_bounds()
-            u_all = self.device_caps()
-            shaped = np.where(active, np.clip(req, l_all, u_all), l_all)
-            demand = np.array(
-                [shaped[offs[k] : offs[k + 1]].sum() for k in range(self.k)]
-            )
-            grants, row_bounds, slice_lo, slice_hi = self._plan(demand, shaped)
+            with spans.span("fleet.shape"):
+                l_all = self.device_bounds()
+                u_all = self.device_caps()
+                shaped = np.where(active, np.clip(req, l_all, u_all), l_all)
+                demand = np.array(
+                    [shaped[offs[k] : offs[k + 1]].sum() for k in range(self.k)]
+                )
+            with spans.span("fleet.plan"):
+                grants, row_bounds, slice_lo, slice_hi = self._plan(demand, shaped)
             t0 = time.perf_counter()
-            if self.mode == "stacked":
-                res = self._step_stacked(req, active, grants, offs, row_bounds)
-            else:
-                res = self._step_loop(req, active, grants, offs, row_bounds, demand)
+            with spans.span("fleet.dispatch"):
+                if self.mode == "stacked":
+                    res = self._step_stacked(req, active, grants, offs, row_bounds)
+                else:
+                    res = self._step_loop(
+                        req, active, grants, offs, row_bounds, demand
+                    )
             wall = time.perf_counter() - t0
         if slice_lo is not None:
             res[1]["slice_lo"] = slice_lo
@@ -1040,6 +1102,35 @@ class FleetOrchestrator:
         )
         return out
 
+    @property
+    def recorder_config(self) -> obs_recorder.RecorderConfig | None:
+        return self._rec_cfg
+
+    def flush_recorder(self, *, reset: bool = False) -> dict[str, Any] | None:
+        """Gather the flight record to host: ``{"mode", "lanes", ...}`` with
+        one per-domain flush dict per lane (see
+        :func:`repro.obs.recorder.flush`), or ``None`` when recording is off.
+
+        Stacked/sharded modes flush the orchestrator's own [K, ...] batched
+        recorder state; loop mode delegates to each domain engine's
+        recorder.  ``reset=True`` clears the buffers after the gather.
+        """
+        if self._rec_cfg is None:
+            return None
+        if self.mode in ("stacked", "sharded"):
+            if self._rec_state is None:
+                lanes: list[dict[str, Any]] = []
+            else:
+                lanes = obs_recorder.flush_lanes(self._rec_state, self._rec_cfg)
+            if reset:
+                self._rec_state = None
+        else:
+            lanes = []
+            for eng in self._engines or []:
+                f = eng.flush_recorder(reset=reset)
+                lanes.append(f["step"] if f is not None and "step" in f else {})
+        return {"mode": self.mode, "lanes": lanes}
+
     def _step_stacked(self, req, active, grants, offs, row_bounds=None):
         K, N = self.k, self._N
         r = np.zeros((K, N))
@@ -1060,7 +1151,11 @@ class FleetOrchestrator:
                 sla_hi[k, : hi_k.shape[0]] = hi_k
         inc = self._inc_carry if self.options.incremental else None
         with self._ctx():
-            x1, x2, x3, warm_c, stats, new_inc = _fleet_step_jit(
+            if self._rec_cfg is not None and self._rec_state is None:
+                self._rec_state = obs_recorder.init_batch(
+                    self._rec_cfg, K, N, self.dtype
+                )
+            x1, x2, x3, warm_c, stats, new_inc, new_rec = _fleet_step_jit(
                 self._dom,
                 jnp.asarray(cap, self.dtype),
                 jnp.asarray(sla_lo, self.dtype),
@@ -1069,10 +1164,14 @@ class FleetOrchestrator:
                 jnp.asarray(act),
                 self._warm,
                 inc,
+                self._rec_state,
                 meta=self.meta,
                 opts=self.options.solver,
+                rec_cfg=self._rec_cfg,
             )
             x3 = np.asarray(x3.block_until_ready())
+        if new_rec is not None:
+            self._rec_state = new_rec
         self._warm = warm_c
         if self.options.incremental:
             # update_carry(None, ...) seeds a fresh anchor on the first
@@ -1081,21 +1180,8 @@ class FleetOrchestrator:
         alloc = np.concatenate([x3[k, : int(self.domain_sizes[k])] for k in range(K)])
         return alloc, self._batched_stats(stats, "stacked")
 
-    def _batched_stats(self, stats, mode: str) -> dict[str, Any]:
-        out = {
-            "solves": np.asarray(stats["solves"]),
-            "iterations": np.asarray(stats["iterations"]),
-            "iterations_per_phase": np.stack(
-                [np.asarray(stats[f"iterations_p{i}"]) for i in (1, 2, 3)],
-                axis=-1,
-            ),
-            "converged": np.asarray(stats["converged"]),
-            "skipped": np.asarray(stats["skipped"]),
-            "certify_pass": np.asarray(stats["certify_pass"]),
-            "mode": mode,
-        }
-        out["phase_iterations"] = out["iterations_per_phase"]
-        return out
+    def _batched_stats(self, stats, mode: str) -> StepStats:
+        return StepStats.from_jit(stats, mode=mode)
 
     def _sharded_plan(self):
         """(PlanRep, RowMaps | None): demand-independent planning arrays for
@@ -1185,8 +1271,12 @@ class FleetOrchestrator:
             act[k, :nk] = active[offs[k] : offs[k + 1]]
         inc = self._inc_carry if self.options.incremental else None
         with self._ctx():
+            if self._rec_cfg is not None and self._rec_state is None:
+                self._rec_state = obs_recorder.init_batch(
+                    self._rec_cfg, K, N, self.dtype
+                )
             rep, rowmap = self._sharded_plan()
-            x3, warm_c, stats, new_inc, grants, demand, slo, shi = shd.step(
+            x3, warm_c, stats, new_inc, grants, demand, slo, shi, new_rec = shd.step(
                 self._dom,
                 jnp.asarray(self._cap_np, self.dtype),
                 jnp.asarray(r, self.dtype),
@@ -1195,15 +1285,19 @@ class FleetOrchestrator:
                 self._warm,
                 inc,
                 rep,
+                self._rec_state,
                 mesh=self._mesh,
                 meta=self.meta,
                 opts=self.options.solver,
                 coord_mode=self.coordinator.mode,
+                rec_cfg=self._rec_cfg,
             )
             x3 = np.asarray(x3.block_until_ready())
         self._warm = warm_c
         if self.options.incremental:
             self._inc_carry = new_inc
+        if new_rec is not None:
+            self._rec_state = new_rec
         alloc = np.concatenate([x3[k, : int(self.domain_sizes[k])] for k in range(K)])
         has_slices = self._sla is not None and self._sla.n_slices > 0
         return (
@@ -1269,6 +1363,7 @@ class FleetOrchestrator:
         )
         allocs, solves, iters, phase_iters, conv = [], [], [], [], []
         skipped, certify = [], []
+        certified, truncated, kkt_res, restarts, kkt_hist = [], [], [], [], []
         for k, eng in enumerate(self._engines):
             rk = req[offs[k] : offs[k + 1]]
             ak = active[offs[k] : offs[k + 1]]
@@ -1291,6 +1386,11 @@ class FleetOrchestrator:
                 conv.append(True)
                 skipped.append(True)
                 certify.append(True)
+                certified.append(True)
+                truncated.append(False)
+                kkt_res.append(0.0)
+                restarts.append(0)
+                kkt_hist.append(np.zeros(solver.KKT_HIST_BUCKETS, np.int32))
                 continue
             eng.set_root_cap(grants[k])  # traced cap swap: no recompile
             if rb_k is not None:
@@ -1304,6 +1404,17 @@ class FleetOrchestrator:
             conv.append(res.stats["converged"])
             skipped.append(bool(res.stats.get("skipped", False)))
             certify.append(bool(res.stats.get("certify_pass", False)))
+            certified.append(bool(res.stats.get("kkt_certified", False)))
+            truncated.append(bool(res.stats.get("truncated", False)))
+            kkt_res.append(float(res.stats.get("kkt_res", 0.0)))
+            restarts.append(int(res.stats.get("restarts", 0)))
+            kkt_hist.append(
+                np.asarray(
+                    res.stats.get(
+                        "kkt_hist", np.zeros(solver.KKT_HIST_BUCKETS, np.int32)
+                    )
+                )
+            )
             if inc:
                 prev["alloc"][k] = res.allocation
                 prev["req"][k] = rk.copy()
@@ -1314,14 +1425,18 @@ class FleetOrchestrator:
                 prev["row_bounds"][k] = (
                     (rb_k[0].copy(), rb_k[1].copy()) if rb_k is not None else None
                 )
-        stats = {
-            "solves": np.asarray(solves),
-            "iterations": np.asarray(iters),
-            "iterations_per_phase": np.asarray(phase_iters),
-            "converged": np.asarray(conv),
-            "skipped": np.asarray(skipped),
-            "certify_pass": np.asarray(certify),
-            "mode": "loop",
-        }
-        stats["phase_iterations"] = stats["iterations_per_phase"]
+        stats = StepStats.build(
+            solves=np.asarray(solves),
+            iterations=np.asarray(iters),
+            phase_iterations=np.asarray(phase_iters),
+            converged=np.asarray(conv),
+            skipped=np.asarray(skipped),
+            certify_pass=np.asarray(certify),
+            kkt_certified=np.asarray(certified),
+            truncated=np.asarray(truncated),
+            kkt_res=np.asarray(kkt_res),
+            restarts=np.asarray(restarts),
+            kkt_hist=np.stack(kkt_hist, axis=0),
+            mode="loop",
+        )
         return np.concatenate(allocs), stats

@@ -117,7 +117,8 @@ class PlanRep(NamedTuple):
 
 
 def _sharded_solve(
-    dom, cap, r, active, rowmap, warm, carry, rep, *, meta, opts, coord_mode, k_total
+    dom, cap, r, active, rowmap, warm, carry, rep, rec,
+    *, meta, opts, coord_mode, k_total, rec_cfg,
 ):
     """Per-shard body: local aggregates -> one psum -> replicated
     coordinator plan -> local feeds -> the vmapped per-domain solve."""
@@ -197,17 +198,25 @@ def _sharded_solve(
     grants_loc = lax.dynamic_slice_in_dim(grants, idx * k_loc, k_loc)
     cap_step = cap.at[:, 0].set(grants_loc)
 
-    _, _, x3, wcarry, stats, new_inc = _solve_domains(
-        dom, cap_step, sla_lo, sla_hi, r, active, warm, carry, meta=meta, opts=opts
+    _, _, x3, wcarry, stats, new_inc, new_rec = _solve_domains(
+        dom, cap_step, sla_lo, sla_hi, r, active, warm, carry, rec,
+        meta=meta, opts=opts, rec_cfg=rec_cfg,
     )
     # per-shard incremental dispatch: each shard's all-skip cond branches
-    # independently inside _solve_domains (no collectives on either side)
-    return x3, wcarry, stats, new_inc, grants, demand, rep.slice_lo, slice_hi_out
+    # independently inside _solve_domains (no collectives on either side);
+    # recording is shard-local too — each shard appends its own lanes
+    return (
+        x3, wcarry, stats, new_inc, grants, demand,
+        rep.slice_lo, slice_hi_out, new_rec,
+    )
 
 
-@functools.partial(jax.jit, static_argnames=("mesh", "meta", "opts", "coord_mode"))
+@functools.partial(
+    jax.jit, static_argnames=("mesh", "meta", "opts", "coord_mode", "rec_cfg")
+)
 def _step_jit(
-    dom, cap, r, active, rowmap, warm, carry, rep, *, mesh, meta, opts, coord_mode
+    dom, cap, r, active, rowmap, warm, carry, rep, rec,
+    *, mesh, meta, opts, coord_mode, rec_cfg,
 ):
     body = functools.partial(
         _sharded_solve,
@@ -215,6 +224,7 @@ def _step_jit(
         opts=opts,
         coord_mode=coord_mode,
         k_total=dom.l.shape[0],
+        rec_cfg=rec_cfg,
     )
     sharded, rep_spec = P(_AXIS), P()
     fn = compat.shard_map(
@@ -229,6 +239,7 @@ def _step_jit(
             sharded,
             sharded,
             rep_spec,
+            sharded,
         ),
         out_specs=(
             sharded,
@@ -239,16 +250,23 @@ def _step_jit(
             rep_spec,
             rep_spec,
             rep_spec,
+            sharded,
         ),
     )
-    return fn(dom, cap, r, active, rowmap, warm, carry, rep)
+    return fn(dom, cap, r, active, rowmap, warm, carry, rep, rec)
 
 
-def step(dom, cap, r, active, rowmap, warm, carry, rep, *, mesh, meta, opts, coord_mode):
+def step(
+    dom, cap, r, active, rowmap, warm, carry, rep, rec=None,
+    *, mesh, meta, opts, coord_mode, rec_cfg=None,
+):
     """One sharded fleet control step.  All array arguments are traced (the
-    zero-recompile contract); ``meta``/``opts``/``coord_mode``/``mesh`` are
-    the only statics.  ``carry`` is the incremental certify anchor with
-    domain-sharded ``[K, ...]`` leaves (None outside incremental mode)."""
+    zero-recompile contract); ``meta``/``opts``/``coord_mode``/``mesh`` (and
+    the flight-recorder ``rec_cfg``) are the only statics.  ``carry`` is the
+    incremental certify anchor with domain-sharded ``[K, ...]`` leaves (None
+    outside incremental mode); ``rec`` is the domain-sharded
+    :class:`repro.obs.recorder.RecorderState` batch (None when recording is
+    off)."""
     if coord_mode not in ("waterfill", "subtree"):
         raise ValueError(
             f"sharded dispatch supports waterfill/subtree coordinators, "
@@ -263,8 +281,10 @@ def step(dom, cap, r, active, rowmap, warm, carry, rep, *, mesh, meta, opts, coo
         warm,
         carry,
         rep,
+        rec,
         mesh=mesh,
         meta=meta,
         opts=opts,
         coord_mode=coord_mode,
+        rec_cfg=rec_cfg,
     )

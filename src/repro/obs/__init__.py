@@ -1,0 +1,40 @@
+"""Observability layer: in-jit flight recorder, host spans, exporters.
+
+- :mod:`repro.obs.recorder` — fixed-shape ring-buffer pytree carried through
+  the compiled step programs (engine, batched, fleet, sharded).
+- :mod:`repro.obs.stats` — the typed :class:`StepStats` record every solve
+  path emits (dict-compatible with the pre-PR-8 stats dicts).
+- :mod:`repro.obs.spans` — nestable host wall-clock spans + Perfetto hook.
+- :mod:`repro.obs.export` — JSONL / Prometheus exposition / summaries.
+- :mod:`repro.obs.report` — ``python -m repro.obs.report`` flight-record CLI.
+"""
+
+from repro.obs.recorder import (
+    FIELDS,
+    RecorderConfig,
+    RecorderState,
+    StepMetrics,
+    flush,
+    flush_lanes,
+    init_batch,
+    init_state,
+    record_step,
+    step_metrics,
+)
+from repro.obs.stats import StepStats
+from repro.obs import spans
+
+__all__ = [
+    "FIELDS",
+    "RecorderConfig",
+    "RecorderState",
+    "StepMetrics",
+    "StepStats",
+    "flush",
+    "flush_lanes",
+    "init_batch",
+    "init_state",
+    "record_step",
+    "step_metrics",
+    "spans",
+]

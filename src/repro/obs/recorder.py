@@ -1,0 +1,322 @@
+"""In-jit flight recorder: a fixed-shape ring-buffer pytree of per-step
+control-plane telemetry, carried through the compiled step programs.
+
+The recorder state is an ordinary pytree of traced arrays, threaded through
+:func:`repro.core.engine._engine_solve`, the fleet orchestrator's stacked
+dispatch, and the sharded per-shard body as one more traced argument/output.
+Every step appends ONE fixed-shape row to the ring via
+``lax.dynamic_update_slice`` and bumps a handful of scalar counters and
+log-bucketed histograms — pure fixed-shape ops, so enabling recording
+recompiles nothing (trace-counter asserted in ``tests/test_obs.py``) and the
+state survives ``vmap`` (per-lane leaves gain a leading ``[K]`` axis) and
+``shard_map`` (the state shards with its domains; records are gathered once
+per :func:`flush`, never per step).
+
+What a row records (see :data:`FIELDS`): the certify tier taken (0 = full
+solve, 1 = Phase-I skip, 2 = full skip), per-phase PDHG iteration splits,
+KKT residual and restart counts from the inner solver, SLA minimum margin,
+satisfaction ratio, grant movement vs the previous step, and the granted
+watts — the operational quantities the paper reports (mean satisfaction,
+interval wall) plus the solver internals needed to explain them.
+
+Host-side reading happens only at :func:`flush` time: the ring is unrolled
+oldest-first, counters and histograms come along, and per-lane states
+(batched/fleet) return one flush dict per lane.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.solver.options import KKT_HIST_BUCKETS, KKT_HIST_LO_EXP
+
+__all__ = [
+    "FIELDS",
+    "RecorderConfig",
+    "RecorderState",
+    "StepMetrics",
+    "init_state",
+    "init_batch",
+    "log_bucket",
+    "step_metrics",
+    "record_step",
+    "flush",
+    "flush_lanes",
+    "rows_as_dicts",
+]
+
+# ring-row field order; flush() returns rows as [R, len(FIELDS)] arrays
+FIELDS = (
+    "step",
+    "kkt_res",
+    "restarts",
+    "iterations",
+    "iter_p1",
+    "iter_p2",
+    "iter_p3",
+    "tier",
+    "skipped",
+    "converged",
+    "certified",
+    "truncated",
+    "sla_min_margin",
+    "satisfaction",
+    "grant_move",
+    "alloc_W",
+)
+
+
+class RecorderConfig(NamedTuple):
+    """Static (hashable) recorder shape: one compiled variant per value."""
+
+    capacity: int = 256  # ring rows kept (oldest overwritten)
+    buckets: int = KKT_HIST_BUCKETS  # log10 histogram buckets
+    lo_exp: int = KKT_HIST_LO_EXP  # bucket 0 left edge = 10**lo_exp
+
+
+class RecorderState(NamedTuple):
+    """The traced flight-record pytree (fixed shapes for the program's
+    life; ``[K, ...]`` leaves under vmap/shard_map)."""
+
+    step: jnp.ndarray  # int32: rows ever written (ring cursor = step % cap)
+    ring: jnp.ndarray  # [capacity, len(FIELDS)]
+    hist_kkt: jnp.ndarray  # [B] int32: per-step max KKT residual buckets
+    hist_move: jnp.ndarray  # [B] int32: per-step grant movement buckets
+    solver_hist: jnp.ndarray  # [B] int32: accumulated in-loop KKT buckets
+    n_skipped: jnp.ndarray  # int32
+    n_p1_skips: jnp.ndarray  # int32
+    n_certified: jnp.ndarray  # int32
+    n_truncated: jnp.ndarray  # int32
+    last_alloc: jnp.ndarray  # [n]: previous step's grants (movement gauge)
+
+
+class StepMetrics(NamedTuple):
+    """One step's scalar gauges, assembled by :func:`step_metrics`."""
+
+    kkt_res: jnp.ndarray
+    restarts: jnp.ndarray
+    iterations: jnp.ndarray
+    iter_p1: jnp.ndarray
+    iter_p2: jnp.ndarray
+    iter_p3: jnp.ndarray
+    tier: jnp.ndarray  # int32: 0 full solve / 1 Phase-I skip / 2 full skip
+    skipped: jnp.ndarray
+    converged: jnp.ndarray
+    certified: jnp.ndarray
+    truncated: jnp.ndarray
+    sla_min_margin: jnp.ndarray
+    satisfaction: jnp.ndarray
+    alloc_W: jnp.ndarray
+    solver_hist: jnp.ndarray  # [B] int32 this step's in-loop KKT buckets
+
+
+def init_state(cfg: RecorderConfig, n: int, dtype=jnp.float64) -> RecorderState:
+    """Fresh (empty) recorder state for an ``n``-device program.
+
+    Every leaf is a DISTINCT buffer (no shared zeros): the engine jit
+    donates the state back to itself each step, and XLA rejects donating
+    one buffer through two leaves."""
+
+    def zi():
+        return jnp.zeros((), jnp.int32)
+
+    def zb():
+        return jnp.zeros((cfg.buckets,), jnp.int32)
+
+    return RecorderState(
+        step=zi(),
+        ring=jnp.zeros((cfg.capacity, len(FIELDS)), dtype),
+        hist_kkt=zb(),
+        hist_move=zb(),
+        solver_hist=zb(),
+        n_skipped=zi(),
+        n_p1_skips=zi(),
+        n_certified=zi(),
+        n_truncated=zi(),
+        last_alloc=jnp.zeros((n,), dtype),
+    )
+
+
+def init_batch(cfg: RecorderConfig, k: int, n: int, dtype=jnp.float64) -> RecorderState:
+    """Per-lane recorder states with ``[k, ...]`` leaves (vmap/shard_map)."""
+    one = init_state(cfg, n, dtype)
+    return jax.tree_util.tree_map(lambda a: jnp.broadcast_to(a, (k,) + a.shape), one)
+
+
+def log_bucket(v: jnp.ndarray, cfg: RecorderConfig) -> jnp.ndarray:
+    """log10 bucket index of a non-negative scalar: bucket ``b`` holds
+    values in ``[10**(lo_exp+b), 10**(lo_exp+b+1))``, clipped at the ends
+    (zero/denormal -> bucket 0, overflow -> bucket B-1)."""
+    lo = jnp.asarray(10.0, v.dtype) ** cfg.lo_exp
+    e = jnp.floor(jnp.log10(jnp.maximum(v, lo)))
+    return jnp.clip(e - cfg.lo_exp, 0, cfg.buckets - 1).astype(jnp.int32)
+
+
+def _one_hot(idx: jnp.ndarray, buckets: int) -> jnp.ndarray:
+    return (jnp.arange(buckets, dtype=jnp.int32) == idx).astype(jnp.int32)
+
+
+def sla_min_margin(alloc, sla_dev, sla_ten, sla_lo, num_rows: int):
+    """Minimum tenant-row slack ``min_t(sum alloc[row t] - lo_t)`` in watts
+    (in-jit; +inf when the program has no SLA rows).  Pad rows with
+    ``lo = 0`` can only report non-negative slack, so they never shadow a
+    binding real row in the min unless every real row has more slack."""
+    if num_rows == 0:
+        return jnp.asarray(jnp.inf, alloc.dtype)
+    sums = jax.ops.segment_sum(alloc[sla_dev], sla_ten, num_segments=num_rows)
+    return jnp.min(sums - sla_lo)
+
+
+def step_metrics(
+    stats: dict,
+    alloc: jnp.ndarray,
+    r: jnp.ndarray,
+    margin: jnp.ndarray,
+) -> StepMetrics:
+    """Assemble one step's gauges from the solve stats dict (the traced
+    output of :func:`repro.core.batched.solve_three_phase`), the final
+    allocation, the shaped request vector, and the SLA minimum margin."""
+    dtype = alloc.dtype
+    skipped = stats["skipped"]
+    certify = stats["certify_pass"]
+    tier = jnp.where(skipped, 2, jnp.where(certify & ~skipped, 1, 0)).astype(jnp.int32)
+    req_tot = jnp.sum(r)
+    sat = jnp.where(
+        req_tot > 0, jnp.sum(jnp.minimum(r, alloc)) / jnp.maximum(req_tot, 1e-30), 1.0
+    )
+    return StepMetrics(
+        kkt_res=jnp.asarray(stats["kkt_res"], dtype),
+        restarts=jnp.asarray(stats["restarts"], jnp.int32),
+        iterations=jnp.asarray(stats["iterations"], jnp.int32),
+        iter_p1=jnp.asarray(stats["iterations_p1"], jnp.int32),
+        iter_p2=jnp.asarray(stats["iterations_p2"], jnp.int32),
+        iter_p3=jnp.asarray(stats["iterations_p3"], jnp.int32),
+        tier=tier,
+        skipped=skipped,
+        converged=stats["converged"],
+        certified=stats["kkt_certified"],
+        truncated=stats["truncated"],
+        sla_min_margin=jnp.asarray(margin, dtype),
+        satisfaction=jnp.asarray(sat, dtype),
+        alloc_W=jnp.sum(alloc),
+        solver_hist=jnp.asarray(stats["kkt_hist"], jnp.int32),
+    )
+
+
+def record_step(
+    cfg: RecorderConfig,
+    state: RecorderState,
+    m: StepMetrics,
+    alloc: jnp.ndarray,
+) -> RecorderState:
+    """Append one step: a single ``dynamic_update_slice`` ring write plus
+    counter/histogram bumps.  Pure fixed-shape jnp — vmap/shard_map safe."""
+    dtype = state.ring.dtype
+    move = jnp.where(
+        state.step > 0, jnp.max(jnp.abs(alloc - state.last_alloc)), 0.0
+    ).astype(dtype)
+    row = jnp.stack(
+        [
+            state.step.astype(dtype),
+            m.kkt_res.astype(dtype),
+            m.restarts.astype(dtype),
+            m.iterations.astype(dtype),
+            m.iter_p1.astype(dtype),
+            m.iter_p2.astype(dtype),
+            m.iter_p3.astype(dtype),
+            m.tier.astype(dtype),
+            m.skipped.astype(dtype),
+            m.converged.astype(dtype),
+            m.certified.astype(dtype),
+            m.truncated.astype(dtype),
+            m.sla_min_margin.astype(dtype),
+            m.satisfaction.astype(dtype),
+            move,
+            m.alloc_W.astype(dtype),
+        ]
+    )[None, :]
+    idx = jnp.mod(state.step, cfg.capacity)
+    ring = jax.lax.dynamic_update_slice(state.ring, row, (idx, jnp.int32(0)))
+    one = jnp.ones((), jnp.int32)
+    zero = jnp.zeros((), jnp.int32)
+    return RecorderState(
+        step=state.step + 1,
+        ring=ring,
+        hist_kkt=state.hist_kkt + _one_hot(log_bucket(m.kkt_res, cfg), cfg.buckets),
+        hist_move=state.hist_move + _one_hot(log_bucket(move, cfg), cfg.buckets),
+        solver_hist=state.solver_hist + m.solver_hist,
+        n_skipped=state.n_skipped + jnp.where(m.skipped, one, zero),
+        n_p1_skips=state.n_p1_skips + jnp.where(m.tier == 1, one, zero),
+        n_certified=state.n_certified + jnp.where(m.certified, one, zero),
+        n_truncated=state.n_truncated + jnp.where(m.truncated, one, zero),
+        last_alloc=alloc,
+    )
+
+
+def flush(state: RecorderState, cfg: RecorderConfig) -> dict[str, Any]:
+    """Materialize one lane's flight record to host numpy (time-ordered
+    rows, counters, histograms).  This is the ONLY host transfer the
+    recorder performs — per-step recording never leaves the device."""
+    step = int(np.asarray(state.step))
+    ring = np.asarray(state.ring)
+    if step <= cfg.capacity:
+        rows = ring[:step].copy()
+    else:
+        cursor = step % cfg.capacity
+        rows = np.roll(ring, -cursor, axis=0)
+    return {
+        "fields": list(FIELDS),
+        "rows": rows,
+        "step": step,
+        "capacity": cfg.capacity,
+        "counters": {
+            "n_steps": step,
+            "n_skipped": int(np.asarray(state.n_skipped)),
+            "n_p1_skips": int(np.asarray(state.n_p1_skips)),
+            "n_certified": int(np.asarray(state.n_certified)),
+            "n_truncated": int(np.asarray(state.n_truncated)),
+        },
+        "hist_kkt": np.asarray(state.hist_kkt),
+        "hist_move": np.asarray(state.hist_move),
+        "solver_hist": np.asarray(state.solver_hist),
+        "hist_lo_exp": cfg.lo_exp,
+    }
+
+
+def flush_lanes(state: RecorderState, cfg: RecorderConfig) -> list[dict[str, Any]]:
+    """Flush a batched state (``[K, ...]`` leaves) to one dict per lane.
+    Under shard_map this is the once-per-flush gather the per-step path
+    avoids (the state stays sharded until here)."""
+    k = int(np.asarray(state.step).shape[0])
+    host = jax.tree_util.tree_map(np.asarray, state)
+    return [flush(jax.tree_util.tree_map(lambda a: a[i], host), cfg) for i in range(k)]
+
+
+def rows_as_dicts(flushed: dict[str, Any], lane: int | None = None) -> list[dict]:
+    """Flight rows as JSONL-ready dicts (ints for counters/flags)."""
+    int_fields = {
+        "step",
+        "restarts",
+        "iterations",
+        "iter_p1",
+        "iter_p2",
+        "iter_p3",
+        "tier",
+        "skipped",
+        "converged",
+        "certified",
+        "truncated",
+    }
+    out = []
+    for row in flushed["rows"]:
+        d = {}
+        if lane is not None:
+            d["lane"] = lane
+        for name, value in zip(flushed["fields"], row):
+            d[name] = int(value) if name in int_fields else float(value)
+        out.append(d)
+    return out

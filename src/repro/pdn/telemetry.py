@@ -89,9 +89,7 @@ class TelemetrySim:
         return np.random.default_rng((self._seed * 1_000_003 + t) & 0x7FFFFFFF)
 
     def _epoch_rng(self, epoch: int) -> np.random.Generator:
-        return np.random.default_rng(
-            (self._seed * 2_000_003 + epoch) & 0x7FFFFFFF
-        )
+        return np.random.default_rng((self._seed * 2_000_003 + epoch) & 0x7FFFFFFF)
 
     def _epoch_assignments(self, t: int) -> tuple[np.ndarray, np.ndarray]:
         """(job_active, job_busy) for the epoch containing step ``t``.
@@ -120,9 +118,7 @@ class TelemetrySim:
             2 * np.pi * t / _DAY_STEPS + self.job_phase
         )
         active_jobs, busy_jobs = self._epoch_assignments(t)
-        burst = np.where(
-            rng.random(self.n_jobs) < cfg.burst_prob, cfg.burst_gain, 1.0
-        )
+        burst = np.where(rng.random(self.n_jobs) < cfg.burst_prob, cfg.burst_gain, 1.0)
         base_busy = cfg.busy_low + self.job_u * (cfg.busy_high - cfg.busy_low)
         base_mod = cfg.moderate_low + self.job_u * (
             cfg.moderate_high - cfg.moderate_low

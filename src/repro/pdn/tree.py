@@ -111,7 +111,7 @@ class FlatPDN:
     dev_l: np.ndarray  # [n] float
     dev_u: np.ndarray  # [n] float
     dev_node: np.ndarray  # [n] int32: node each device is attached to
-    dev_depth: np.ndarray  # [n] int32: number of ancestor nodes (constraint rows covering the device)
+    dev_depth: np.ndarray  # [n] int32: ancestor count (rows covering the device)
 
     @property
     def n(self) -> int:
@@ -131,7 +131,10 @@ class FlatPDN:
         # child ranges nested within parent range
         for j in range(1, m):
             p = self.node_parent[j]
-            if not (self.node_start[p] <= self.node_start[j] and self.node_end[j] <= self.node_end[p]):
+            if not (
+                self.node_start[p] <= self.node_start[j]
+                and self.node_end[j] <= self.node_end[p]
+            ):
                 raise ValueError(f"node {j} range not nested in parent {p}")
         if (self.dev_l < 0).any() or (self.dev_l > self.dev_u).any():
             raise ValueError("device limits must satisfy 0 <= l <= u")
@@ -159,7 +162,9 @@ class FlatPDN:
         return float(self.dev_u.sum() / self.node_cap[0])
 
 
-def flatten(root: PDNNode, *, default_l: float = 200.0, default_u: float = 700.0) -> FlatPDN:
+def flatten(
+    root: PDNNode, *, default_l: float = 200.0, default_u: float = 700.0
+) -> FlatPDN:
     """DFS-flatten a PDN tree into contiguous-range arrays."""
     node_start: list[int] = []
     node_end: list[int] = []
@@ -262,6 +267,7 @@ def build_from_level_sizes(
     oversubscription: float = 0.85,
 ) -> FlatPDN:
     """Uniform tree with given branching factors per level (root first)."""
+
     def make(level: int) -> PDNNode:
         if level == len(level_sizes):
             return PDNNode(capacity=gpus_per_server * u, n_devices=gpus_per_server)

@@ -65,11 +65,15 @@ class PowerController:
         sla: SlaTopo | None = None,
         priority: np.ndarray | None = None,
         config: ControllerConfig | None = None,
+        recorder=None,
     ):
         self.pdn = pdn
         self.sla = sla
         self.priority = priority
         self.config = config or ControllerConfig()
+        # flight-recorder config forwarded to the engine (True = defaults;
+        # see repro.obs.recorder.RecorderConfig); engine path only
+        self.recorder = recorder
         self._warm = None
         self._engine: AllocEngine | None = None
         self._topology: FleetTopology | None = None
@@ -165,10 +169,19 @@ class PowerController:
                 priority=self.priority,
                 options=self.config.options,
                 idle_threshold=self.config.idle_threshold,
+                recorder=self.recorder,
             )
             if self.supply_scale != 1.0:
                 self._engine.rescale_supply(self.supply_scale, reset_warm=False)
         return self._engine
+
+    def flush_recorder(self, *, reset: bool = False):
+        """Gather the engine's flight record to host (see
+        :meth:`repro.core.engine.AllocEngine.flush_recorder`); ``None``
+        when recording is off or no engine step has run yet."""
+        if self._engine is None:
+            return None
+        return self._engine.flush_recorder(reset=reset)
 
     # -- main loop ---------------------------------------------------------
 

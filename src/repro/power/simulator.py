@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.core.greedy import greedy_allocate, static_allocate
 from repro.core.metrics import satisfaction_ratio
+from repro.obs import spans
 from repro.pdn.telemetry import TelemetrySim, TraceConfig
 from repro.pdn.tree import FlatPDN
 from repro.power.controller import PowerController
@@ -54,14 +55,18 @@ class DatacenterSim:
               orchestrator: "FleetOrchestrator | None" = None,
               fleet_level: int | None = None,
               tenants: "TenantLayout | None" = None,
-              trace_cfg: TraceConfig | None = None) -> "DatacenterSim":
+              trace_cfg: TraceConfig | None = None,
+              recorder=None) -> "DatacenterSim":
         """``fleet_level`` switches to fleet mode: the PDN is cut at that
         depth into power domains served by a :class:`FleetOrchestrator`
         (waterfill budget coordination).  Pass ``orchestrator`` instead for
         a custom-configured one.  ``tenants`` attaches a tenant SLA layout
         to whichever control plane is built — tenants may span the fleet
         cut (the coordinator splits their entitlements per step) — and
-        enables the per-step SLA margin metrics in :meth:`run`."""
+        enables the per-step SLA margin metrics in :meth:`run`.
+        ``recorder`` (True or a :class:`repro.obs.recorder.RecorderConfig`)
+        turns on the in-jit flight recorder of whichever control plane is
+        built here; drain it with :meth:`flush_flight`."""
         trace = TelemetrySim(
             trace_cfg or TraceConfig(n_devices=pdn.n, seed=seed)
         )
@@ -76,15 +81,16 @@ class DatacenterSim:
             from repro.fleet import FleetOrchestrator
 
             orchestrator = FleetOrchestrator(
-                pdn, level=fleet_level, tenants=tenants
+                pdn, level=fleet_level, tenants=tenants, recorder=recorder
             )
         ctrl = None
         if orchestrator is None:
             if controller is None and tenants is not None:
                 controller = PowerController(
-                    pdn, sla=tenants.sla_topo(), priority=tenants.priority
+                    pdn, sla=tenants.sla_topo(), priority=tenants.priority,
+                    recorder=recorder,
                 )
-            ctrl = controller or PowerController(pdn)
+            ctrl = controller or PowerController(pdn, recorder=recorder)
         return cls(pdn=pdn, trace=trace, controller=ctrl,
                    orchestrator=orchestrator, tenants=tenants)
 
@@ -121,6 +127,14 @@ class DatacenterSim:
         res = self.controller.step(power, active=active)
         wall = self.controller.history[-1]["wall_s"]
         return res.allocation, wall, bool(res.stats.get("truncated", False))
+
+    def flush_flight(self, *, reset: bool = False):
+        """Drain the control plane's in-jit flight record (``None`` when the
+        sim was built without ``recorder=``)."""
+        plane = self.orchestrator or self.controller
+        if plane is None:
+            return None
+        return plane.flush_recorder(reset=reset)
 
     def run(self, steps: int, *, start: int = 0, baselines: bool = True,
             use_scheduler_state: bool = True,
@@ -159,36 +173,43 @@ class DatacenterSim:
             fetch = buf.fetch
         try:
             for t in range(start, start + steps):
-                power = fetch(t)
-                active = (
-                    self.trace.active_mask(t) if use_scheduler_state else None
-                )
-                alloc, wall, truncated = self._step_alloc(power, active)
-                r = np.clip(power, self.pdn.dev_l, self.pdn.dev_u)
-                r = np.where(
-                    active if active is not None
-                    else power >= self._idle_threshold,
-                    r, self.pdn.dev_l,
-                )
-                out["S_nvpax"].append(satisfaction_ratio(r, alloc))
-                out["wall_ms"].append(1000 * wall)
-                # deadline/anytime mode (engine path reports it; host path too)
-                out["truncated"].append(truncated)
-                rep = straggler_report(alloc, self.trace.job_of, self.dvfs)
-                out["straggler_tax"].append(rep["mean_tax"])
-                if self.tenants is not None:
-                    out["sla_min_margin"].append(_min_margin(alloc))
+                with spans.span("sim.telemetry"):
+                    power = fetch(t)
+                    active = (
+                        self.trace.active_mask(t)
+                        if use_scheduler_state else None
+                    )
+                with spans.span("sim.control"):
+                    alloc, wall, truncated = self._step_alloc(power, active)
+                with spans.span("sim.metrics"):
+                    r = np.clip(power, self.pdn.dev_l, self.pdn.dev_u)
+                    r = np.where(
+                        active if active is not None
+                        else power >= self._idle_threshold,
+                        r, self.pdn.dev_l,
+                    )
+                    out["S_nvpax"].append(satisfaction_ratio(r, alloc))
+                    out["wall_ms"].append(1000 * wall)
+                    # deadline/anytime mode (engine path reports it; host
+                    # path too)
+                    out["truncated"].append(truncated)
+                    rep = straggler_report(alloc, self.trace.job_of, self.dvfs)
+                    out["straggler_tax"].append(rep["mean_tax"])
+                    if self.tenants is not None:
+                        out["sla_min_margin"].append(_min_margin(alloc))
+                        if baselines:
+                            out["sla_min_margin_static"].append(
+                                _min_margin(static_alloc)
+                            )
                     if baselines:
-                        out["sla_min_margin_static"].append(
-                            _min_margin(static_alloc)
+                        out["S_static"].append(
+                            satisfaction_ratio(r, static_alloc)
                         )
-                if baselines:
-                    out["S_static"].append(
-                        satisfaction_ratio(r, static_alloc)
-                    )
-                    out["S_greedy"].append(
-                        satisfaction_ratio(r, greedy_allocate(self.pdn, power))
-                    )
+                        out["S_greedy"].append(
+                            satisfaction_ratio(
+                                r, greedy_allocate(self.pdn, power)
+                            )
+                        )
         finally:
             if buf is not None:
                 buf.close()
